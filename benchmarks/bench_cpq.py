@@ -1,0 +1,80 @@
+"""T2 CPQ benchmark (paper §IV / Fig. 4-5): compression ratio, reconstruction
+error, HQE level growth over decode, end-to-end attention-output error —
+against the baselines the paper positions itself to (KIVI-style
+quantize-only at 8/4 bit, ThinK-style prune-only)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CPQCfg
+from repro.core import cpq as C
+from repro.core.attention import dense_attention
+from repro.core.cpq import cpq_bytes_per_token, dense_bytes_per_token
+from repro.kernels.cpq_dequant_attn.kernel import cpq_decode_fwd
+
+
+def _attn_err(kx, vx, q, cfgq: CPQCfg):
+    """Attention-output error vs exact bf16 K/V."""
+    N = kx.shape[1]
+    tk = C.cpq_compress_prefill(kx, cfgq, N)
+    tv = C.cpq_compress_prefill(vx, cfgq, N)
+    kh = C.cpq_dequant(tk, jnp.float32)
+    vh = C.cpq_dequant(tv, jnp.float32)
+    ln = jnp.asarray(N, jnp.int32)
+    ref = dense_attention(q, kx, vx, 0.125, causal=False, kv_length=ln)
+    out = dense_attention(q, kh, vh, 0.125, causal=False, kv_length=ln)
+    return float(jnp.abs(out - ref).max()), float(
+        jnp.sqrt(jnp.mean((out - ref) ** 2)))
+
+
+def main(emit):
+    key = jax.random.PRNGKey(0)
+    B, N, KV, Dh, H = 2, 512, 8, 64, 16
+    ks = jax.random.split(key, 3)
+    kx = jax.random.normal(ks[0], (B, N, KV, Dh))
+    vx = jax.random.normal(ks[1], (B, N, KV, Dh))
+    q = jax.random.normal(ks[2], (B, 1, H, Dh))
+
+    dense_b = dense_bytes_per_token(KV, Dh)
+    variants = {
+        "cpq_4b_p40": CPQCfg(prune_ratio=0.4, bits=4),
+        "cpq_8b_p40": CPQCfg(prune_ratio=0.4, bits=8),
+        "kivi_style_8b": CPQCfg(prune_ratio=0.0, bits=8),   # quantize-only
+        "kivi_style_4b": CPQCfg(prune_ratio=0.0, bits=4),
+        "think_style_prune60": CPQCfg(prune_ratio=0.6, bits=8),
+    }
+    for name, cq in variants.items():
+        mx, rms = _attn_err(kx, vx, q, cq)
+        ratio = dense_b / cpq_bytes_per_token(cq, KV, Dh)
+        emit(f"t2_{name}", 0.0,
+             f"compress={ratio:.2f}x;attn_max_err={mx:.4f};attn_rms={rms:.5f}")
+
+    # HQE level growth across 64 decode appends (drifting distribution)
+    cq = CPQCfg(prune_ratio=0.4, bits=4, max_levels=4)
+    t = C.cpq_compress_prefill(kx, cq, N + 64)
+    for i in range(64):
+        tok = (1.0 + i * 0.1) * jax.random.normal(
+            jax.random.fold_in(key, i), (B, 1, KV, Dh))
+        t = C.cpq_append_decode(t, tok, jnp.asarray(N + i, jnp.int32), cq)
+    emit("t2_hqe_levels_after_64_drifting_tokens", 0.0,
+         f"mean_levels={float(jnp.mean(t.num_levels)):.2f};"
+         f"max_levels={int(jnp.max(t.num_levels))}")
+
+    # fused dequant-attention kernel wall time (interpret mode, trend only)
+    cq = CPQCfg(prune_ratio=0.4, bits=8)
+    tk = C.cpq_compress_prefill(kx, cq, N)
+    tv = C.cpq_compress_prefill(vx, cq, N)
+    qg = q[:, 0].reshape(B, KV, H // KV, Dh)
+    ln = jnp.asarray(N, jnp.int32)
+    f = jax.jit(lambda: cpq_decode_fwd(
+        qg, tk.codes, tv.codes, tk.scale, tk.zero, tv.scale, tv.zero,
+        tk.level, tv.level, ln, scale=0.125, block_n=128))
+    f().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        f().block_until_ready()
+    emit("t2_dequant_kernel_interp", (time.perf_counter() - t0) / 3 * 1e6, "")

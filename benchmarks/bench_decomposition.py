@@ -1,0 +1,89 @@
+"""T1 benchmark (paper §III / Fig. 2): decode-attention cache traffic and
+modeled latency, standard K/V vs decomposed X-cache, per assigned arch.
+
+Also times the actual jnp decode-attention paths on a mid-size config (CPU
+wall time — trend check only; the roofline model carries the TPU numbers).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.hw import TPU_V5E
+from repro.configs import ARCHS
+from repro.core.attention import dense_attention
+from repro.core.decomposed_attention import decomposed_attention
+from repro.models.attention_layer import decoupled_rope_dims
+
+
+def traffic_rows():
+    rows = []
+    for name, cfg in ARCHS.items():
+        if cfg.attention_free:
+            continue
+        r = decoupled_rope_dims(cfg)
+        dense_b = 2 * cfg.num_kv_heads * cfg.head_dim * 2          # K+V bf16
+        x_b = (cfg.d_model + cfg.num_kv_heads * r) * 2             # X + rope keys
+        # per-token per-layer decode latency at HBM bw (memory-bound regime)
+        t_dense = dense_b / TPU_V5E.hbm_bw
+        t_x = x_b / TPU_V5E.hbm_bw
+        # extra FLOPs of the decomposed form per cached token:
+        # H*d_model (scores) + H*d_model (values) vs 2*H*head_dim MACs
+        f_dense = 2 * 2 * cfg.num_heads * cfg.head_dim * 2
+        f_x = 2 * 2 * cfg.num_heads * cfg.d_model * 2
+        t_x_compute = f_x / TPU_V5E.peak_flops
+        win = t_dense / max(t_x, t_x_compute)
+        rows.append({
+            "arch": name,
+            "kv": cfg.num_kv_heads,
+            "heads": cfg.num_heads,
+            "dense_B_per_tok": dense_b,
+            "xcache_B_per_tok": x_b,
+            "traffic_ratio": round(dense_b / x_b, 3),
+            "modeled_speedup": round(win, 3),
+            "flops_ratio": round(f_x / f_dense, 1),
+            "applicable": x_b < dense_b,
+        })
+    return rows
+
+
+def timed_paths(n: int = 4096, d_model: int = 512, h: int = 8, reps: int = 5):
+    """CPU wall time of one decode attention, dense vs decomposed (MHA)."""
+    kv, dh = h, d_model // h
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, n, d_model), jnp.float32)
+    wk = jax.random.normal(ks[1], (d_model, kv, dh)) / d_model**0.5
+    wv = jax.random.normal(ks[2], (d_model, kv, dh)) / d_model**0.5
+    q = jax.random.normal(ks[3], (1, 1, h, dh))
+    k = jnp.einsum("bnm,mkd->bnkd", x, wk)
+    v = jnp.einsum("bnm,mkd->bnkd", x, wv)
+    ln = jnp.asarray(n, jnp.int32)
+
+    f_dense = jax.jit(lambda q, k, v: dense_attention(
+        q, k, v, dh**-0.5, causal=False, kv_length=ln))
+    f_dec = jax.jit(lambda q, x: decomposed_attention(
+        q, jnp.zeros((1, 1, h, 0)), x, jnp.zeros((1, n, kv, 0)), wk, wv, ln,
+        dh**-0.5))
+    f_dense(q, k, v).block_until_ready()
+    f_dec(q, x).block_until_ready()
+
+    def t(f, *a):
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            f(*a).block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    return t(f_dense, q, k, v), t(f_dec, q, x)
+
+
+def main(emit):
+    us_d, us_x = timed_paths()
+    emit("t1_decode_dense_jnp", us_d, "")
+    emit("t1_decode_decomposed_jnp", us_x, "")
+    for r in traffic_rows():
+        emit(f"t1_traffic_{r['arch']}", 0.0,
+             f"ratio={r['traffic_ratio']};speedup={r['modeled_speedup']};"
+             f"applicable={r['applicable']}")

@@ -1,0 +1,97 @@
+"""End-to-end OPT-6.7B inference energy/throughput model (paper §IV table).
+
+Reproduces the paper's comparison METHODOLOGY (their numbers come from a
+ReRAM-PIM simulator; ours from an analytical latency/energy model with
+published device constants — see benchmarks/hw.py):
+
+  energy/token = moved_bytes * pj_per_byte + MACs * pj_per_mac
+  time/token   = max(MACs*2 / peak_flops, moved_bytes / mem_bw)
+
+Configurations:
+  a100-dense          weights + bf16 KV over HBM (the paper's GPU baseline)
+  flightllm           FPGA baseline (paper's accelerator baseline)
+  pim-t1t2            the paper's design: weights stationary in CIM,
+                      T1 decomposition (no K/V rewrite; X cache), T2 CPQ
+                      4-bit+prune cache, sparse CE
+  tpu-v5e-dense       our target hardware, vanilla serving
+  tpu-v5e-t1t2        our TPU-native adaptation (X-cache + CPQ cache)
+
+Paper's headline: PIM vs A100 = 159.9x energy / 49.6x throughput;
+vs FlightLLM = 34.8x / 29.2x. We print ours next to those.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.hw import A100, FLIGHTLLM, PIM, TPU_V5E, Device
+from repro.common.param import count_params
+from repro.configs import get_config
+from repro.configs.base import CPQCfg
+from repro.core.cpq import cpq_bytes_per_token
+from repro.models.model import model_defs
+
+
+@dataclasses.dataclass
+class ServingCfg:
+    ctx: int = 2048
+    batch: int = 1
+    weights_stationary: bool = False   # PIM: weights never leave the macros
+    kv_bytes_per_token_layer: float = 0.0  # set per variant
+    extra_kv_write_penalty: float = 0.0    # CWC rewrite energy (ReRAM baseline)
+
+
+def decode_token_cost(dev: Device, n_params: float, L: int, cfg: ServingCfg):
+    """Per generated token (per sequence), amortized over the batch."""
+    macs = n_params + 0.0  # linear layers: one MAC per weight per token
+    kv_bytes = cfg.kv_bytes_per_token_layer * L * cfg.ctx
+    attn_macs = cfg.kv_bytes_per_token_layer / 2 * L * cfg.ctx  # ~1 MAC/elem
+    w_bytes = 0.0 if cfg.weights_stationary else 2.0 * n_params / cfg.batch
+    bytes_moved = w_bytes + kv_bytes + cfg.extra_kv_write_penalty
+    t = max(2.0 * (macs + attn_macs) / dev.peak_flops,
+            bytes_moved / dev.hbm_bw)
+    e = (bytes_moved * dev.mem_pj_per_byte + (macs + attn_macs) * dev.mac_pj) * 1e-12
+    return t, e
+
+
+def main(emit):
+    cfg = get_config("opt-6.7b")
+    n_params = count_params(model_defs(cfg))
+    L = cfg.num_layers
+    kv_dense = 2.0 * cfg.num_kv_heads * cfg.head_dim * 2       # K+V bf16
+    kv_x = float(cfg.d_model * 2)                              # T1 X-cache (no rope)
+    kv_cpq = 2 * cpq_bytes_per_token(CPQCfg(prune_ratio=0.4, bits=4),
+                                     cfg.num_kv_heads, cfg.head_dim)
+    kv_x_cpq = cpq_bytes_per_token(CPQCfg(prune_ratio=0.4, bits=4), 1,
+                                   cfg.d_model)
+
+    for batch in (1, 8):
+        variants = {
+            "a100-dense": (A100, ServingCfg(batch=batch,
+                                            kv_bytes_per_token_layer=kv_dense)),
+            "flightllm": (FLIGHTLLM, ServingCfg(batch=batch,
+                                                kv_bytes_per_token_layer=kv_dense)),
+            "pim-t1t2": (PIM, ServingCfg(batch=batch, weights_stationary=True,
+                                         kv_bytes_per_token_layer=kv_x_cpq)),
+            "tpu-v5e-dense": (TPU_V5E, ServingCfg(batch=batch,
+                                                  kv_bytes_per_token_layer=kv_dense)),
+            "tpu-v5e-t1": (TPU_V5E, ServingCfg(batch=batch,
+                                               kv_bytes_per_token_layer=kv_x)),
+            "tpu-v5e-t1t2": (TPU_V5E, ServingCfg(batch=batch,
+                                                 kv_bytes_per_token_layer=kv_x_cpq)),
+        }
+        res = {}
+        for name, (dev, sc) in variants.items():
+            t, e = decode_token_cost(dev, n_params, L, sc)
+            res[name] = (t, e)
+            emit(f"e2e_b{batch}_{name}", t * 1e6,
+                 f"tok_per_s={1 / t:.1f};mJ_per_tok={e * 1e3:.3f}")
+        ee = lambda a, b: (res[b][1] / res[a][1], res[b][0] / res[a][0])  # noqa: E731
+        e_a, th_a = ee("pim-t1t2", "a100-dense")
+        e_f, th_f = ee("pim-t1t2", "flightllm")
+        emit(f"e2e_b{batch}_pim_vs_a100", 0.0,
+             f"energy_eff={e_a:.1f}x(paper:159.9x);throughput={th_a:.1f}x(paper:49.6x)")
+        emit(f"e2e_b{batch}_pim_vs_flightllm", 0.0,
+             f"energy_eff={e_f:.1f}x(paper:34.8x);throughput={th_f:.1f}x(paper:29.2x)")
+        e_t, th_t = ee("tpu-v5e-t1t2", "tpu-v5e-dense")
+        emit(f"e2e_b{batch}_tpu_t1t2_vs_dense", 0.0,
+             f"energy_eff={e_t:.2f}x;throughput={th_t:.2f}x (beyond-paper TPU adaptation)")

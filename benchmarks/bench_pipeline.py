@@ -1,0 +1,24 @@
+"""Sub-matrix pipeline benchmark (paper Fig. 3): layer-level vs sub-matrix
+latency/utilization across sub-matrix counts, plus the cross-chip analogue
+(GPipe bubble fractions)."""
+from __future__ import annotations
+
+from repro.core.submatrix_pipeline import (
+    StageCost, layer_level_latency, speedup, submatrix_latency, utilization)
+from repro.distributed.pipeline import bubble_fraction
+
+
+def main(emit):
+    for n in (2, 4, 8, 16, 64, 256):
+        for c in (StageCost(1.0, 1.0), StageCost(1.0, 0.5), StageCost(0.5, 1.0)):
+            ll = layer_level_latency(n, c)
+            sm = submatrix_latency(n, c)
+            emit(f"fig3_nsub{n}_s1{c.t_stage1}_s2{c.t_stage2}", 0.0,
+                 f"layer={ll:.1f};submatrix={sm:.1f};"
+                 f"speedup={speedup(n, c):.3f};"
+                 f"util_layer={utilization(n, c, ll):.3f};"
+                 f"util_sub={utilization(n, c, sm):.3f}")
+    for m in (4, 8, 32):
+        for s in (2, 4):
+            emit(f"gpipe_bubble_m{m}_s{s}", 0.0,
+                 f"bubble={bubble_fraction(m, s):.3f}")

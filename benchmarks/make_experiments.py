@@ -1,0 +1,36 @@
+"""Regenerate the roofline table inside EXPERIMENTS.md from the dry-run
+records (between the ROOFLINE_TABLE marker and the next section)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from benchmarks.roofline import load_all, markdown_table
+
+ROOT = Path(__file__).resolve().parents[1]
+MARK = "<!-- ROOFLINE_TABLE -->"
+
+
+def main():
+    rows = load_all()
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    multi = [r for r in rows if r["mesh"] != "16x16"]
+    single.sort(key=lambda r: (r["arch"], r["shape"], r["mode"]))
+
+    block = [MARK, "", "### Single-pod (16x16 = 256 chips) — the roofline table", "",
+             markdown_table(single), "",
+             "### Multi-pod (2x16x16 = 512 chips) — dry-run proof "
+             "(pod axis shards; per-device terms)", ""]
+    multi.sort(key=lambda r: (r["arch"], r["shape"], r["mode"]))
+    block.append(markdown_table(multi))
+    text = (ROOT / "EXPERIMENTS.md").read_text()
+    pre, _, rest = text.partition(MARK)
+    # cut everything up to the next markdown section header after the marker
+    idx = rest.find("\nReading of the final table")
+    tail = rest[idx:] if idx >= 0 else rest
+    (ROOT / "EXPERIMENTS.md").write_text(pre + "\n".join(block) + "\n" + tail)
+    print(f"wrote roofline table: {len(single)} single-pod + {len(multi)} "
+          f"multi-pod rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""T3 long-context decode: attention as nearest-neighbor retrieval.
+
+Builds a multi-thousand-token cache on a small model and decodes with the
+proxy->top-k->re-score pipeline, comparing outputs and traffic vs dense.
+
+  PYTHONPATH=src python examples/longcontext_retrieval.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.configs.base import AttentionRuntime, RetrievalCfg
+from repro.models import model as M
+
+N_CTX = 4096
+
+
+def main():
+    cfg = dataclasses.replace(smoke_config(ARCHS["qwen1.5-0.5b"]),
+                              dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    toks = jax.random.randint(key, (1, N_CTX), 0, cfg.vocab_size)
+
+    outs = {}
+    for mode, rt in {
+        "dense": AttentionRuntime("dense"),
+        "retrieval": AttentionRuntime(
+            "retrieval", retrieval=RetrievalCfg(top_k=256, recent_window=64)),
+    }.items():
+        c = dataclasses.replace(cfg, attention=rt)
+        caches = M.init_caches(c, rt, 1, N_CTX + 8)
+        t0 = time.time()
+        lg, caches = jax.jit(lambda p, b, ch: M.prefill(c, rt, p, b, ch))(
+            params, {"tokens": toks}, caches)
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        lg2, _ = jax.jit(lambda p, t, pos, ch: M.decode_step(c, rt, p, t, pos, ch))(
+            params, tok, jnp.asarray(N_CTX, jnp.int32), caches)
+        outs[mode] = np.asarray(lg2)
+        print(f"[longctx] mode={mode:9s} decode logit top5 "
+              f"{np.argsort(-outs[mode][0])[:5].tolist()}  ({time.time()-t0:.1f}s)")
+
+    top5_d = set(np.argsort(-outs["dense"][0])[:5].tolist())
+    top5_r = set(np.argsort(-outs["retrieval"][0])[:5].tolist())
+    kv_b = 2 * cfg.num_kv_heads * cfg.head_dim * 2
+    pr_b = cfg.num_kv_heads * cfg.head_dim
+    k_sel = 256 / N_CTX
+    # NOTE: at RANDOM init attention is diffuse (top-256 of 4096 holds only a
+    # small softmax-mass fraction), so exact agreement is not expected — on
+    # trained models attention is peaked and T3 recovers dense outputs (see
+    # tests/test_core_retrieval.py and benchmarks/bench_retrieval.py).
+    print(f"[longctx] top-5 overlap (random-init model): {len(top5_d & top5_r)}/5")
+    print(f"[longctx] similarity+V traffic: dense {N_CTX * kv_b / 1e6:.2f} MB/layer "
+          f"-> retrieval {(N_CTX * pr_b + 256 * kv_b) / 1e6:.2f} MB/layer "
+          f"(top-k fraction {k_sel:.3f})")
+
+
+if __name__ == "__main__":
+    main()

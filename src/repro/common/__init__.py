@@ -1,0 +1,2 @@
+from repro.common.param import ParamDef, init_tree, abstract_tree, spec_tree, count_params
+from repro.common.types import Dtype, bf16, f32, i32

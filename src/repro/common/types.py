@@ -1,0 +1,12 @@
+"""Shared dtype aliases used across the framework."""
+import jax.numpy as jnp
+
+Dtype = jnp.dtype
+
+bf16 = jnp.bfloat16
+f32 = jnp.float32
+f16 = jnp.float16
+i32 = jnp.int32
+i8 = jnp.int8
+u8 = jnp.uint8
+i4 = jnp.int4

@@ -1,0 +1,204 @@
+"""Config system.
+
+A ``ModelConfig`` fully determines the parameter tree, sharding, and step
+functions. Architectures are expressed as a repeating ``block_pattern`` of
+(mixer, mlp) layer kinds (plus an optional unrolled ``prefix_pattern``) so the
+decoder stack can be lowered as a ``lax.scan`` over stacked blocks — this
+keeps the HLO (and compile time / remat behaviour) independent of depth.
+
+The paper's techniques are runtime-selectable through ``AttentionRuntime``:
+  mode = dense | decomposed (T1 X-cache) | cpq (T2) | retrieval (T3)
+MLA layers (deepseek-v2-lite) always use the absorbed/decomposed path — see
+DESIGN.md for why MLA *is* an instance of the paper's decomposition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- sub-configs
+
+
+@dataclass(frozen=True)
+class MoECfg:
+    num_experts: int = 64
+    num_shared: int = 2
+    top_k: int = 6
+    d_ff_expert: int = 1408
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class MLACfg:
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    q_lora_rank: int = 0  # 0 => direct q projection (V2-Lite)
+
+
+@dataclass(frozen=True)
+class MambaCfg:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 => d_model // 16
+
+
+@dataclass(frozen=True)
+class XLSTMCfg:
+    proj_factor: float = 2.0
+    conv_kernel: int = 4
+    chunk: int = 256  # chunkwise-parallel block for mLSTM training
+
+
+@dataclass(frozen=True)
+class CPQCfg:
+    """T2: cascade pruning-quantization of the KV / X cache."""
+
+    prune_ratio: float = 0.4      # fraction of elements zeroed (per channel, magnitude)
+    bits: int = 4                 # quantized code width (4 or 8)
+    max_levels: int = 4           # HQE: max hierarchical extension levels
+    tolerance: float = 1.0        # TR multiplier: token spawns new level if |x| > tol * range
+    residual_window: int = 32     # most-recent tokens kept in full precision
+
+
+@dataclass(frozen=True)
+class RetrievalCfg:
+    """T3: attention as nearest-neighbor retrieval."""
+
+    top_k: int = 512              # exact re-score candidates per query
+    proxy_bits: int = 8           # proxy similarity precision (CAM analogue)
+    proxy_dim: int = 0            # 0 => full d_head at low precision; else low-rank proxy
+    recent_window: int = 64       # always-attended recent tokens (dense tail)
+
+
+@dataclass(frozen=True)
+class AttentionRuntime:
+    # dense | decomposed (T1) | cpq (T2) | retrieval (T3)
+    # | decomposed_cpq (T1+T2: CPQ-compressed X cache)
+    mode: str = "dense"
+    cpq: Optional[CPQCfg] = None
+    retrieval: Optional[RetrievalCfg] = None
+
+    def __post_init__(self):
+        assert self.mode in ("dense", "decomposed", "cpq", "retrieval",
+                             "decomposed_cpq"), self.mode
+        if self.mode in ("cpq", "decomposed_cpq") and self.cpq is None:
+            object.__setattr__(self, "cpq", CPQCfg())
+        if self.mode == "retrieval" and self.retrieval is None:
+            object.__setattr__(self, "retrieval", RetrievalCfg())
+
+
+# ------------------------------------------------------------------- model
+
+
+MIXERS = ("attn", "xattn", "mla", "mamba", "mlstm", "slstm")
+MLPS = ("dense", "moe", "none")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | vlm | audio | ssm | hybrid
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    # layer layout: prefix (unrolled) + num_blocks x block_pattern (scanned)
+    block_pattern: tuple[tuple[str, str], ...]
+    num_blocks: int
+    prefix_pattern: tuple[tuple[str, str], ...] = ()
+    # flavor knobs
+    mlp_act: str = "swiglu"  # swiglu | geglu | gelu
+    norm: str = "rmsnorm"    # rmsnorm | layernorm
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    pos_embedding: str = "rope"  # rope | absolute | none
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma: scale embeddings by sqrt(d_model)
+    logit_softcap: float = 0.0
+    input_kind: str = "tokens"  # tokens | audio_frames | text+patches
+    num_patch_tokens: int = 0   # vlm: visual tokens per sample (stub frontend)
+    # sub-configs
+    moe: Optional[MoECfg] = None
+    mla: Optional[MLACfg] = None
+    mamba: Optional[MambaCfg] = None
+    xlstm: Optional[XLSTMCfg] = None
+    attention: AttentionRuntime = AttentionRuntime()
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        for mixer, mlp in self.prefix_pattern + self.block_pattern:
+            assert mixer in MIXERS, mixer
+            assert mlp in MLPS, mlp
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.prefix_pattern) + self.num_blocks * len(self.block_pattern)
+
+    @property
+    def layer_kinds(self) -> tuple[tuple[str, str], ...]:
+        return self.prefix_pattern + self.block_pattern * self.num_blocks
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_mha(self) -> bool:
+        return self.num_kv_heads == self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return not any(m in ("attn", "xattn", "mla") for m, _ in self.layer_kinds)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if long contexts are tractable without dense attention
+        (SSM/hybrid family, or T3 retrieval attention enabled)."""
+        fams = self.family in ("ssm", "hybrid")
+        return fams or self.attention.mode == "retrieval"
+
+    def with_attention(self, mode: str, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, attention=AttentionRuntime(mode=mode, **kw))
+
+
+# ------------------------------------------------------------------- shapes
+
+
+@dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+    def __post_init__(self):
+        assert self.kind in ("train", "prefill", "decode")
+
+
+SHAPES: dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """Whether (arch x shape) is a defined cell, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (enable attention.mode='retrieval' "
+            "— the paper's T3 — to run this cell)"
+        )
+    return True, ""

@@ -1,0 +1,25 @@
+"""DeepSeekMoE-16B [arXiv:2401.06066; hf].
+
+28L d_model=2048 16H (MHA: kv=16), fine-grained MoE: 2 shared + 64 routed
+top-6, expert d_ff=1408, first layer dense (d_ff=10944), vocab=102400.
+MHA (kv == heads) makes this a strong T1 X-cache arch: caching X halves
+decode cache traffic vs K+V.
+"""
+from repro.configs.base import ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=10944,
+    vocab_size=102400,
+    prefix_pattern=(("attn", "dense"),),
+    block_pattern=(("attn", "moe"),),
+    num_blocks=27,
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    moe=MoECfg(num_experts=64, num_shared=2, top_k=6, d_ff_expert=1408),
+)

@@ -1,0 +1,25 @@
+"""Gemma-2B [arXiv:2403.08295; hf].
+
+18L d_model=2048 8H (MQA: kv=1) d_ff=16384 GeGLU, head_dim=256, vocab=256000,
+embeddings scaled by sqrt(d_model), tied LM head.
+MQA: K+V cache (2*256 per token) is already 4x smaller than X (2048), so the
+T1 X-cache is a regression here — supported but off (DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b",
+    family="dense",
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=256000,
+    block_pattern=(("attn", "dense"),),
+    num_blocks=18,
+    mlp_act="geglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    embed_scale=True,
+)

@@ -1,0 +1,34 @@
+"""Jamba-1.5-Large (398B total / 94B active) [arXiv:2403.19887; hf].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536; Mamba:attention 7:1
+(one attention layer per 8-layer block, at position 4), MoE 16e top-2 every
+other layer. Hybrid => runs long_500k natively (Mamba state is O(1); the
+single KV cache per 8 layers is sequence-sharded).
+"""
+from repro.configs.base import MambaCfg, ModelConfig, MoECfg
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=65536,
+    block_pattern=(
+        ("mamba", "dense"),
+        ("mamba", "moe"),
+        ("mamba", "dense"),
+        ("mamba", "moe"),
+        ("attn", "dense"),
+        ("mamba", "moe"),
+        ("mamba", "dense"),
+        ("mamba", "moe"),
+    ),
+    num_blocks=9,
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    moe=MoECfg(num_experts=16, num_shared=0, top_k=2, d_ff_expert=24576),
+    mamba=MambaCfg(d_state=16, d_conv=4, expand=2),
+)

@@ -1,0 +1,36 @@
+"""Llama-3.2-11B-Vision backbone [hf:meta-llama/Llama-3.2-11B-Vision; unverified].
+
+40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256; every 5th layer is a
+gated cross-attention layer over precomputed patch embeddings (the vision
+frontend is a STUB per the assignment: ``input_specs`` provides patch
+embeddings already projected to d_model).
+Cross-attention K/V are static per request (computed once at prefill) — no
+CWC issue, so T1 applies only to self-attn layers; with GQA kv=8 the X-cache
+is larger than K+V, so T1 is off by default (see DESIGN.md §5).
+"""
+from repro.configs.base import ModelConfig
+
+# 40 layers, cross-attn at indices 3, 8, 13, ... => block of 5 with xattn at pos 3
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    block_pattern=(
+        ("attn", "dense"),
+        ("attn", "dense"),
+        ("attn", "dense"),
+        ("xattn", "dense"),
+        ("attn", "dense"),
+    ),
+    num_blocks=8,
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    rope_theta=500000.0,
+    input_kind="text+patches",
+    num_patch_tokens=1600,
+)

@@ -1,0 +1,25 @@
+"""MusicGen-large decoder backbone [arXiv:2306.05284; hf].
+
+48L d_model=2048 32H (MHA: kv=32) d_ff=8192 vocab=2048 (EnCodec codes).
+The EnCodec frontend is a STUB: ``input_specs`` provides precomputed frame
+embeddings (B, S, d_model). MHA makes this the best T1 arch (2x decode cache
+traffic reduction) — it is the paper-representative hillclimb cell.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=2048,
+    block_pattern=(("attn", "dense"),),
+    num_blocks=48,
+    mlp_act="gelu",
+    norm="layernorm",
+    pos_embedding="absolute",
+    input_kind="audio_frames",
+)

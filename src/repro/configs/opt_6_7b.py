@@ -1,0 +1,23 @@
+"""OPT-6.7B [arXiv:2205.01068] — the paper's end-to-end evaluation model.
+
+32L d_model=4096 32H (MHA) d_ff=16384 GELU LayerNorm vocab=50272.
+Used by benchmarks/bench_e2e_energy.py to reproduce the 159.9x / 34.8x
+energy-efficiency comparison methodology.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="opt-6.7b",
+    family="dense",
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=50272,
+    block_pattern=(("attn", "dense"),),
+    num_blocks=32,
+    mlp_act="gelu",
+    norm="layernorm",
+    pos_embedding="absolute",
+)

@@ -1,0 +1,22 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family; hf].
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936, qk_norm.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab_size=151936,
+    block_pattern=(("attn", "dense"),),
+    num_blocks=36,
+    mlp_act="swiglu",
+    norm="rmsnorm",
+    qk_norm=True,
+    rope_theta=1000000.0,
+)

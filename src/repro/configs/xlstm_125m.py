@@ -1,0 +1,33 @@
+"""xLSTM-125M [arXiv:2405.04517; unverified].
+
+12L d_model=768 4H, sLSTM + mLSTM blocks (no separate FFN: d_ff=0 — the
+blocks carry their own up/down projections with proj_factor=2).
+Attention-free: the paper's KV-cache techniques are inapplicable (DESIGN.md
+§5); the mLSTM matrix memory is itself the associative-memory view of §V.
+Runs long_500k natively (O(1) recurrent state).
+"""
+from repro.configs.base import ModelConfig, XLSTMCfg
+
+# ratio ~5:1 mLSTM:sLSTM; 12 layers = 2 blocks of [m m m m m s]
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=(
+        ("mlstm", "none"),
+        ("mlstm", "none"),
+        ("mlstm", "none"),
+        ("mlstm", "none"),
+        ("mlstm", "none"),
+        ("slstm", "none"),
+    ),
+    num_blocks=2,
+    norm="layernorm",
+    pos_embedding="none",
+    xlstm=XLSTMCfg(proj_factor=2.0, conv_kernel=4, chunk=256),
+)

@@ -1,0 +1,15 @@
+"""The paper's contributions as composable JAX modules.
+
+T1: decomposed_attention / submatrix_pipeline  (§III)
+T2: cpq                                        (§IV)
+T3: retrieval_attention                        (§V)
+attention: mode dispatcher; kv_cache: decode arenas per mode.
+"""
+from repro.core import (  # noqa: F401
+    attention,
+    cpq,
+    decomposed_attention,
+    kv_cache,
+    retrieval_attention,
+    submatrix_pipeline,
+)

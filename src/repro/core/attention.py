@@ -1,0 +1,337 @@
+"""Attention-mode dispatcher.
+
+One entry point per phase:
+  * ``dense_attention``      — reference SDA over explicit K/V (train/prefill)
+  * ``init_cache``           — build the decode arena for the configured mode
+  * ``prefill_into_cache``   — bulk-write prompt K/V (mode-specific compress)
+  * ``decode_attend``        — one-token attention over the cache + append
+
+Prefill COMPUTE is always dense (the paper's techniques target the decode
+traffic; CPQ compresses prefill *outputs* on the fly). The mode determines
+what is cached and how decode reads it.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionRuntime
+from repro.core import cpq as cpq_lib
+from repro.core import kv_cache as kvc
+from repro.core import retrieval_attention as ret_lib
+from repro.core.decomposed_attention import decomposed_attention
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------- dense
+
+
+def dense_attention(
+    q: jax.Array,              # (B, T, H, Dh)
+    k: jax.Array,              # (B, S, KV, Dh)
+    v: jax.Array,              # (B, S, KV, Dh)
+    scale: float,
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,   # absolute position of q[0] (decode)
+    kv_length: Optional[jax.Array] = None,  # () valid kv tokens (cache arenas)
+    logit_bias: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference GQA scaled dot-product attention (pure jnp oracle)."""
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, T, KV, g, Dh)
+    s = jnp.einsum("btkgd,bskd->btkgs", qg, k).astype(jnp.float32) * scale
+    s = s.reshape(B, T, H, S)
+    if logit_bias is not None:
+        s = s + logit_bias
+
+    pos_j = jnp.arange(S, dtype=jnp.int32)
+    ok = jnp.ones((T, S), bool)
+    if causal:
+        pos_i = jnp.arange(T, dtype=jnp.int32) + q_offset
+        ok = pos_j[None, :] <= pos_i[:, None]
+    if kv_length is not None:
+        ok = ok & (pos_j[None, :] < kv_length)
+    s = jnp.where(ok[None, :, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    wg = w.reshape(B, T, KV, g, S).astype(v.dtype)
+    # output head dim follows V (MLA has Dv != Dq)
+    return jnp.einsum("btkgs,bskd->btkgd", wg, v).reshape(B, T, H, v.shape[-1])
+
+
+def cpq_chunked_decode_attention(q, kt, vt, length, scale: float,
+                                 chunk: int = 2048) -> jax.Array:
+    """T2 decode attention with IN-LOOP dequantization (the jnp analogue of
+    kernels/cpq_dequant_attn): a scan over cache chunks dequantizes int8
+    codes transiently, so HBM moves the COMPRESSED bytes — dequantizing the
+    whole arena first costs more traffic than a bf16 cache (measured:
+    1.53e12 vs 1.49e12 B/device on musicgen decode_32k; EXPERIMENTS.md §Perf
+    cell A iteration A3). Level lookup is a one-hot (chunk, L) matmul like
+    the kernel's DQU. q: (B, 1, H, Dh) -> (B, 1, H, Dv)."""
+    B, _, H, Dh = q.shape
+    N, KV = kt.codes.shape[1], kt.codes.shape[2]
+    Dv = vt.codes.shape[3]
+    L = kt.scale.shape[1]
+    g = H // KV
+    c = min(chunk, N)
+    pad = (-N) % c
+    nch = (N + pad) // c
+
+    def chunked(t, d):
+        a = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+                    constant_values=d) if pad else t
+        return a.reshape(B, nch, c, *a.shape[2:]).swapaxes(0, 1)
+
+    qg = q[:, 0].reshape(B, KV, g, Dh).astype(jnp.float32)
+
+    def dequant(codes, level, scale_t, zero_t):
+        # codes: (B,c,KV,D); level: (B,c,KV); scale/zero: (B,L,KV,D)
+        # bf16 output: the dequantized chunk is the traffic the plain-XLA
+        # path cannot avoid (the Pallas kernel keeps it in VMEM) — halve it
+        oh = jax.nn.one_hot(level, L, dtype=jnp.float32)       # (B,c,KV,L)
+        s = jnp.einsum("bckl,blkd->bckd", oh, scale_t)
+        z = jnp.einsum("bckl,blkd->bckd", oh, zero_t)
+        cd = codes.astype(jnp.float32) + 128.0
+        return jnp.where(cd == 0.0, 0.0, (cd - 1.0) * s + z).astype(jnp.bfloat16)
+
+    def body(acc, inp):
+        m, l, o = acc
+        ck, cv, lvk, lvv, base = inp
+        k_hat = dequant(ck, lvk, kt.scale, kt.zero)            # (B,c,KV,Dh)
+        s = jnp.einsum("bkgd,bckd->bkgc", qg, k_hat) * scale
+        pos = base + jnp.arange(c, dtype=jnp.int32)
+        s = jnp.where((pos < length)[None, None, None, :], s, NEG_INF)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m2)
+        p = jnp.exp(s - m2[..., None])
+        l2 = l * corr + jnp.sum(p, axis=-1)
+        v_hat = dequant(cv, lvv, vt.scale, vt.zero)
+        o2 = o * corr[..., None] + jnp.einsum("bkgc,bckd->bkgd", p, v_hat)
+        return (m2, l2, o2), None
+
+    m0 = jnp.full((B, KV, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, g), jnp.float32)
+    o0 = jnp.zeros((B, KV, g, Dv), jnp.float32)
+    bases = jnp.arange(nch, dtype=jnp.int32) * c
+    (m, l, o), _ = jax.lax.scan(
+        body, (m0, l0, o0),
+        (chunked(kt.codes, -128), chunked(vt.codes, -128),
+         chunked(kt.level, 0), chunked(vt.level, 0), bases))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+def decomposed_cpq_chunked_decode(q_nope, q_rope, xt, k_rope, w_k_nope, w_v,
+                                  length, scale: float, chunk: int = 2048):
+    """T1+T2 composition: decode attention over a CPQ-COMPRESSED X cache.
+
+    Per chunk: dequantize X codes (HQE one-hot level lookup), run BOTH
+    cascaded MatMuls of the decomposition on the same dequantized tile
+    (scores R X^T and values P += S X), online softmax across chunks. The
+    per-token cache payload is d_model * bits/8 * keep_frac — T1's 2x (MHA)
+    stacked with T2's ~4.5x. q_nope: (B,1,H,Dn) -> (B,1,H,Dv)."""
+    from repro.core.decomposed_attention import decomposed_query_transform
+    from repro.distributed.sharding import constrain
+
+    B, _, H, Dn = q_nope.shape
+    Dm = xt.codes.shape[3]
+    KV, Dv = w_v.shape[1], w_v.shape[2]
+    N = xt.codes.shape[1]
+    L = xt.scale.shape[1]
+    rr = 0 if q_rope is None else q_rope.shape[-1]
+
+    r = decomposed_query_transform(q_nope, w_k_nope)[:, 0]  # (B, H, Dm)
+    r = constrain(r, "act_batch", None, "act_mlp")
+    qr = None if rr == 0 else q_rope[:, 0].astype(jnp.float32)  # (B, H, rr)
+
+    c = min(chunk, N)
+    pad = (-N) % c
+    nch = (N + pad) // c
+
+    def chunked(t, d=0):
+        a = jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2),
+                    constant_values=d) if pad else t
+        return a.reshape(B, nch, c, *a.shape[2:]).swapaxes(0, 1)
+
+    def dequant(codes, level):
+        oh = jax.nn.one_hot(level[:, :, 0], L, dtype=jnp.float32)  # (B,c,L)
+        s = jnp.einsum("bcl,bld->bcd", oh, xt.scale[:, :, 0, :])
+        z = jnp.einsum("bcl,bld->bcd", oh, xt.zero[:, :, 0, :])
+        cd = codes[:, :, 0, :].astype(jnp.float32) + 128.0
+        return jnp.where(cd == 0.0, 0.0, (cd - 1.0) * s + z).astype(jnp.bfloat16)
+
+    def body(acc, inp):
+        m, l, p_acc = acc
+        codes_b, lvl_b, kr_b, base = inp
+        x_hat = dequant(codes_b, lvl_b)                        # (B, c, Dm)
+        s = jnp.einsum("bhm,bcm->bhc", r.astype(jnp.bfloat16),
+                       x_hat).astype(jnp.float32)
+        if qr is not None:
+            kv_r = kr_b.shape[2]
+            g_r = H // kv_r
+            s = s + jnp.einsum(
+                "bkgr,bckr->bkgc",
+                qr.reshape(B, kv_r, g_r, rr), kr_b.astype(jnp.float32)
+            ).reshape(B, H, c)
+        s = s * scale
+        pos = base + jnp.arange(c, dtype=jnp.int32)
+        s = jnp.where((pos < length)[None, None, :], s, NEG_INF)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        corr = jnp.exp(m - m2)
+        w = jnp.exp(s - m2[..., None])
+        l2 = l * corr + jnp.sum(w, axis=-1)
+        p2 = p_acc * corr[..., None] + jnp.einsum(
+            "bhc,bcm->bhm", w, x_hat.astype(jnp.float32))
+        return (m2, l2, p2), None
+
+    m0 = jnp.full((B, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H), jnp.float32)
+    p0 = jnp.zeros((B, H, Dm), jnp.float32)
+    bases = jnp.arange(nch, dtype=jnp.int32) * c
+    (m, l, p), _ = jax.lax.scan(
+        body, (m0, l0, p0),
+        (chunked(xt.codes, -128), chunked(xt.level), chunked(k_rope), bases))
+    p = (p / jnp.maximum(l, 1e-30)[..., None])                 # (B, H, Dm)
+    g = H // KV
+    out = jnp.einsum("bkgm,mkd->bkgd",
+                     p.reshape(B, KV, g, Dm).astype(w_v.dtype), w_v)
+    return out.reshape(B, 1, H, Dv)
+
+
+# ----------------------------------------------------------------- caches
+
+
+def init_cache(rt: AttentionRuntime, *, batch: int, n_max: int, kv: int, dh: int,
+               d_model: int, rope_dims: int, dtype=jnp.bfloat16) -> kvc.Cache:
+    if rt.mode == "dense":
+        return kvc.init_dense(batch, n_max, kv, dh, dtype)
+    if rt.mode == "decomposed":
+        return kvc.init_x(batch, n_max, d_model, kv, rope_dims, dtype)
+    if rt.mode == "cpq":
+        return kvc.init_cpq(batch, n_max, kv, dh, rt.cpq)
+    if rt.mode == "decomposed_cpq":
+        return kvc.init_cpq_x(batch, n_max, d_model, kv, rope_dims, rt.cpq, dtype)
+    if rt.mode == "retrieval":
+        return kvc.init_retrieval(batch, n_max, kv, dh, rt.retrieval, dtype)
+    raise ValueError(rt.mode)
+
+
+def prefill_into_cache(
+    rt: AttentionRuntime,
+    cache: kvc.Cache,
+    *,
+    k: jax.Array,              # (B, S, KV, Dh) roped keys
+    v: jax.Array,              # (B, S, KV, Dh)
+    x: Optional[jax.Array],    # (B, S, Dm) attention-block input (T1 operand)
+    k_rope: Optional[jax.Array],  # (B, S, KV, R) decoupled roped slice (T1)
+    length: jax.Array,         # () number of prompt tokens
+) -> kvc.Cache:
+    S = k.shape[1]
+    if isinstance(cache, kvc.DenseKVCache):
+        return kvc.DenseKVCache(
+            kvc.append_tokens(cache.k, k, 0), kvc.append_tokens(cache.v, v, 0), length)
+    if isinstance(cache, kvc.XCache):
+        return kvc.XCache(
+            kvc.append_tokens(cache.x, x, 0),
+            kvc.append_tokens(cache.k_rope, k_rope, 0) if k_rope is not None else cache.k_rope,
+            length)
+    if isinstance(cache, kvc.CPQKVCache):
+        kt = cpq_lib.cpq_compress_prefill(k, rt.cpq, cache.k.n_max)
+        vt = cpq_lib.cpq_compress_prefill(v, rt.cpq, cache.v.n_max)
+        return kvc.CPQKVCache(kt, vt, length)
+    if isinstance(cache, kvc.CPQXCache):  # T1+T2: compress the X operand
+        xt = cpq_lib.cpq_compress_prefill(x[:, :, None, :], rt.cpq, cache.x.n_max)
+        return kvc.CPQXCache(
+            xt,
+            kvc.append_tokens(cache.k_rope, k_rope, 0)
+            if k_rope is not None else cache.k_rope,
+            length)
+    if isinstance(cache, kvc.RetrievalCache):
+        dp = rt.retrieval.proxy_dim or k.shape[-1]
+        codes, pscale, pzero = ret_lib.fit_proxy(k[..., :dp], rt.retrieval.proxy_bits)
+        return kvc.RetrievalCache(
+            kvc.append_tokens(cache.k, k, 0),
+            kvc.append_tokens(cache.v, v, 0),
+            kvc.append_tokens(cache.proxy, codes, 0),
+            pscale, pzero, length)
+    raise TypeError(type(cache))
+
+
+# ------------------------------------------------------------------ decode
+
+
+def decode_attend(
+    rt: AttentionRuntime,
+    cache: kvc.Cache,
+    *,
+    q: jax.Array,              # (B, 1, H, Dh) roped query
+    k_t: jax.Array,            # (B, 1, KV, Dh) roped new key
+    v_t: jax.Array,            # (B, 1, KV, Dh)
+    x_t: Optional[jax.Array],  # (B, 1, Dm)
+    k_rope_t: Optional[jax.Array],  # (B, 1, KV, R)
+    q_nope: Optional[jax.Array],    # (B, 1, H, Dn) content query (T1)
+    q_rope: Optional[jax.Array],    # (B, 1, H, R) roped query slice (T1)
+    w_k_nope: Optional[jax.Array],  # (Dm, KV, Dn) (T1)
+    w_v: Optional[jax.Array],       # (Dm, KV, Dh) (T1)
+    scale: float,
+) -> tuple[jax.Array, kvc.Cache]:
+    """Append one token to the cache and attend over it. Returns
+    (out (B,1,H,Dh), new_cache)."""
+    pos = cache.length
+    new_len = cache.length + 1
+
+    if isinstance(cache, kvc.DenseKVCache):
+        cache = kvc.DenseKVCache(
+            kvc.append_tokens(cache.k, k_t, pos), kvc.append_tokens(cache.v, v_t, pos), new_len)
+        out = dense_attention(q, cache.k, cache.v, scale, causal=False, kv_length=new_len)
+        return out, cache
+
+    if isinstance(cache, kvc.XCache):
+        cache = kvc.XCache(
+            kvc.append_tokens(cache.x, x_t, pos),
+            kvc.append_tokens(cache.k_rope, k_rope_t, pos)
+            if k_rope_t is not None else cache.k_rope,
+            new_len)
+        out = decomposed_attention(
+            q_nope, q_rope, cache.x, cache.k_rope, w_k_nope, w_v, new_len, scale)
+        return out, cache
+
+    if isinstance(cache, kvc.CPQKVCache):
+        kt = cpq_lib.cpq_append_decode(cache.k, k_t, pos, rt.cpq)
+        vt = cpq_lib.cpq_append_decode(cache.v, v_t, pos, rt.cpq)
+        cache = kvc.CPQKVCache(kt, vt, new_len)
+        out = cpq_chunked_decode_attention(q, kt, vt, new_len, scale)
+        return out, cache
+
+    if isinstance(cache, kvc.CPQXCache):
+        # T1+T2: HQE-append the new X row, then the fused two-stage sweep
+        # over dequantized X chunks (scores AND value stage reuse each chunk)
+        xt = cpq_lib.cpq_append_decode(cache.x, x_t[:, :, None, :], pos, rt.cpq)
+        cache = kvc.CPQXCache(
+            xt,
+            kvc.append_tokens(cache.k_rope, k_rope_t, pos)
+            if k_rope_t is not None else cache.k_rope,
+            new_len)
+        out = decomposed_cpq_chunked_decode(
+            q_nope, q_rope, xt, cache.k_rope, w_k_nope, w_v, new_len, scale)
+        return out, cache
+
+    if isinstance(cache, kvc.RetrievalCache):
+        dp = rt.retrieval.proxy_dim or k_t.shape[-1]
+        code_t = ret_lib.encode_proxy(
+            k_t[..., :dp], cache.proxy_scale, cache.proxy_zero, rt.retrieval.proxy_bits)
+        cache = kvc.RetrievalCache(
+            kvc.append_tokens(cache.k, k_t, pos),
+            kvc.append_tokens(cache.v, v_t, pos),
+            kvc.append_tokens(cache.proxy, code_t, pos),
+            cache.proxy_scale, cache.proxy_zero, new_len)
+        out = ret_lib.retrieval_attention(
+            q, cache.k, cache.v, cache.proxy, cache.proxy_scale, cache.proxy_zero,
+            new_len, rt.retrieval, scale)
+        return out, cache
+
+    raise TypeError(type(cache))

@@ -1,0 +1,237 @@
+"""T2 — Cascade Pruning-Quantization (CPQ) of the KV / X cache, with the
+Hierarchical Quantization Extension (HQE) for decode (paper §IV).
+
+Cascade order (Fig. 4): (1) fine-grained per-channel magnitude pruning of
+unimportant elements — applied at prefill AND decode — then (2) per-channel
+quantization (PCQ) of the surviving non-zero elements. Code 0 is reserved for
+pruned elements so they dequantize to exactly 0 and the non-zero payload can
+be moved/compacted separately (the paper transfers only non-zero data; on TPU
+the analogue is the reduced HBM byte count measured by the traffic model and
+realized by the fused dequant-attention kernel reading int codes).
+
+HQE (Fig. 5): per-(channel, level) scale/zero pairs. Level-0 parameters are
+fit at prefill. During decode each new token is checked against the tolerance
+range (TR) of the current level; if any channel falls outside, a NEW level is
+created whose range is the union of the previous range and the token (the TR
+"progressively extends"), so every token is quantized exactly once and no
+channel is ever re-quantized. Levels saturate at ``max_levels`` (further
+out-of-range tokens clip into the last level — the clip error is measurable
+via ``cpq_dequant``).
+
+All functions are jit-safe with static shapes: caches are pre-allocated to
+``n_max`` tokens and ``max_levels`` levels.
+
+Layout convention: ``x`` is (B, N, H, D) — tokens on axis 1; a "channel" is
+an (H, D) pair, matching per-channel KV quantization literature (KIVI,
+KVQuant): statistics are taken over the token axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CPQCfg
+
+
+class CPQTensor(NamedTuple):
+    """A CPQ-compressed (B, N, H, D) cache tensor."""
+
+    codes: jax.Array        # (B, N, H, D) int8 = code - 128, code in [0, 2^bits-1]; code 0 == pruned
+    scale: jax.Array        # (B, L, H, D) f32, per (level, channel)
+    zero: jax.Array         # (B, L, H, D) f32 — the range minimum ("zero point")
+    level: jax.Array        # (B, N, H) int32 — HQE level of each token
+    num_levels: jax.Array   # (B, H) int32 — levels allocated so far (>= 1)
+    prune_thr: jax.Array    # (B, H, D) f32 — per-channel magnitude threshold
+
+    @property
+    def n_max(self) -> int:
+        return self.codes.shape[1]
+
+
+def _nonzero_codes(bits: int) -> int:
+    # codes 1 .. 2^bits - 1 encode surviving values; code 0 == pruned
+    return (1 << bits) - 1
+
+
+def cpq_prune_mask(x: jax.Array, thr: jax.Array) -> jax.Array:
+    """Element mask: keep |x| >= per-channel threshold. x: (..., N, H, D),
+    thr broadcastable (..., 1, H, D)."""
+    return jnp.abs(x) >= thr
+
+
+def _fit_level(x: jax.Array, mask: jax.Array, bits: int):
+    """Per-channel (over token axis 1) range fit of the surviving elements.
+
+    Returns (scale, zero) with shapes (B, H, D)."""
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, jnp.float32)
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(jnp.where(mask, xf, big), axis=1)
+    hi = jnp.max(jnp.where(mask, xf, -big), axis=1)
+    any_kept = jnp.any(mask, axis=1)
+    lo = jnp.where(any_kept, lo, 0.0)
+    hi = jnp.where(any_kept, hi, 0.0)
+    steps = _nonzero_codes(bits) - 1  # codes 1..2^b-1 => 2^b-2 intervals
+    scale = (hi - lo) / jnp.maximum(steps, 1)
+    scale = jnp.maximum(scale, 1e-8)
+    return scale, lo
+
+
+def _encode(x: jax.Array, mask: jax.Array, scale: jax.Array, zero: jax.Array, bits: int):
+    """Quantize surviving elements to codes 1..2^b-1 (code 0 == pruned).
+
+    scale/zero broadcast against x: (B, 1 or N, H, D)."""
+    xf = x.astype(jnp.float32)
+    q = jnp.round((xf - zero) / scale) + 1.0
+    q = jnp.clip(q, 1, _nonzero_codes(bits))
+    # stored with a -128 bias so the full 8-bit code range fits in int8
+    return (jnp.where(mask, q, 0.0) - 128.0).astype(jnp.int8)
+
+
+def decode_codes(codes: jax.Array, scale: jax.Array, zero: jax.Array, dtype=jnp.bfloat16):
+    """Dequantize: code 0 -> exactly 0; code c>0 -> (c-1)*scale + zero.
+    Stored codes carry a -128 bias (int8 range)."""
+    c = codes.astype(jnp.float32) + 128.0
+    val = (c - 1.0) * scale + zero
+    return jnp.where(c == 0, 0.0, val).astype(dtype)
+
+
+# --------------------------------------------------------------- prefill path
+
+
+def cpq_compress_prefill(x: jax.Array, cfg: CPQCfg, n_max: int) -> CPQTensor:
+    """Bulk-compress prefill tokens (level 0) and allocate the decode arena.
+
+    x: (B, N, H, D) with N <= n_max valid tokens (all treated valid here;
+    masking of unwritten slots is the cache's job).
+    """
+    B, N, H, D = x.shape
+    assert N <= n_max, (N, n_max)
+    xf = jnp.abs(x.astype(jnp.float32))
+    # per-channel magnitude threshold at the prune_ratio quantile over tokens
+    thr = jnp.quantile(xf, cfg.prune_ratio, axis=1)  # (B, H, D)
+    mask = cpq_prune_mask(x, thr[:, None])
+    scale0, zero0 = _fit_level(x, mask, cfg.bits)  # (B, H, D)
+    codes = _encode(x, mask, scale0[:, None], zero0[:, None], cfg.bits)
+
+    L = cfg.max_levels
+    scale = jnp.zeros((B, L, H, D), jnp.float32).at[:, 0].set(scale0)
+    zero = jnp.zeros((B, L, H, D), jnp.float32).at[:, 0].set(zero0)
+    if n_max > N:
+        pad = jnp.zeros((B, n_max - N, H, D), jnp.int8)
+        codes = jnp.concatenate([codes, pad], axis=1)
+    level = jnp.zeros((B, n_max, H), jnp.int32)
+    num_levels = jnp.ones((B, H), jnp.int32)
+    return CPQTensor(codes, scale, zero, level, num_levels, thr)
+
+
+# ---------------------------------------------------------------- decode path
+
+
+def cpq_append_decode(t: CPQTensor, x_t: jax.Array, pos: jax.Array, cfg: CPQCfg) -> CPQTensor:
+    """HQE append of one token. x_t: (B, 1, H, D); pos: () int32 write slot.
+
+    Each token is quantized exactly once: if, for a head, any channel of the
+    (pruned) token falls outside the tolerance range of that head's current
+    level, a new level is spawned whose range is the union of the old range
+    and the token's values (range extension), and the token is encoded with
+    the new parameters. Otherwise the current level is reused.
+    """
+    B, one, H, D = x_t.shape
+    assert one == 1
+    bits = cfg.bits
+    steps = _nonzero_codes(bits) - 1
+    xf = x_t[:, 0].astype(jnp.float32)  # (B, H, D)
+
+    # (1) prune with the prefill-fitted per-channel thresholds (decode-stage
+    #     pruning, as the paper extends pruning beyond prefill)
+    mask = jnp.abs(xf) >= t.prune_thr  # (B, H, D)
+
+    cur = t.num_levels - 1  # (B, H) current level index
+    take = lambda a: jnp.take_along_axis(a, cur[:, None, :, None], axis=1)[:, 0]  # noqa: E731
+    s_cur = take(t.scale)  # (B, H, D)
+    z_cur = take(t.zero)
+    lo_cur, hi_cur = z_cur, z_cur + s_cur * steps
+
+    # (2) tolerance-range check over surviving channels (per head)
+    tol = cfg.tolerance
+    width = jnp.maximum(hi_cur - lo_cur, 1e-8)
+    lo_tr = lo_cur - (tol - 1.0) * width
+    hi_tr = hi_cur + (tol - 1.0) * width
+    outside = mask & ((xf < lo_tr) | (xf > hi_tr))
+    spawn = jnp.any(outside, axis=-1)  # (B, H)
+    can_spawn = t.num_levels < cfg.max_levels
+    spawn = spawn & can_spawn
+
+    # (3) new-level parameters: union of current range and the token
+    lo_new = jnp.minimum(lo_cur, jnp.where(mask, xf, lo_cur))
+    hi_new = jnp.maximum(hi_cur, jnp.where(mask, xf, hi_cur))
+    s_new = jnp.maximum((hi_new - lo_new) / jnp.maximum(steps, 1), 1e-8)
+
+    new_idx = jnp.where(spawn, t.num_levels, cur)  # (B, H)
+    put = lambda arr, val: jnp.where(  # noqa: E731
+        (jnp.arange(arr.shape[1], dtype=jnp.int32)[None, :, None, None]
+         == new_idx[:, None, :, None]) & spawn[:, None, :, None],
+        val[:, None],
+        arr,
+    )
+    scale = put(t.scale, s_new)
+    zero = put(t.zero, lo_new)
+
+    s_use = jnp.where(spawn[..., None], s_new, s_cur)
+    z_use = jnp.where(spawn[..., None], lo_new, z_cur)
+    code_t = _encode(x_t, mask[:, None], s_use[:, None], z_use[:, None], bits)  # (B,1,H,D)
+
+    codes = jax.lax.dynamic_update_slice_in_dim(t.codes, code_t, pos, axis=1)
+    level = jax.lax.dynamic_update_slice_in_dim(
+        t.level, new_idx[:, None, :].astype(jnp.int32), pos, axis=1
+    )
+    num_levels = t.num_levels + spawn.astype(jnp.int32)
+    return CPQTensor(codes, scale, zero, level, num_levels, t.prune_thr)
+
+
+# ------------------------------------------------------------------ reference
+
+
+def cpq_dequant(t: CPQTensor, dtype=jnp.bfloat16) -> jax.Array:
+    """Reference dequantization of the whole arena -> (B, N, H, D)."""
+    # gather per-token scale/zero via the level index
+    lvl = t.level[..., None]  # (B, N, H, 1)
+    s = jnp.take_along_axis(t.scale, jnp.broadcast_to(lvl, t.codes.shape), axis=1)
+    z = jnp.take_along_axis(t.zero, jnp.broadcast_to(lvl, t.codes.shape), axis=1)
+    return decode_codes(t.codes, s, z, dtype)
+
+
+def cpq_roundtrip_error(x: jax.Array, t: CPQTensor) -> dict[str, jax.Array]:
+    """Diagnostics: error of dequant(compress(x)) on the first N tokens."""
+    n = x.shape[1]
+    xh = cpq_dequant(t, jnp.float32)[:, :n]
+    xf = x.astype(jnp.float32)
+    kept = t.codes[:, :n] != -128  # stored code 0 - 128 == pruned
+    err = jnp.abs(xh - xf)
+    return {
+        "max_err_kept": jnp.max(jnp.where(kept, err, 0.0)),
+        "rms_err": jnp.sqrt(jnp.mean(err**2)),
+        "keep_frac": jnp.mean(kept.astype(jnp.float32)),
+        "pruned_exact_zero": jnp.max(jnp.where(~kept, jnp.abs(xh), 0.0)),
+    }
+
+
+# -------------------------------------------------------------- traffic model
+
+
+def cpq_bytes_per_token(cfg: CPQCfg, h: int, d: int, keep_frac: float | None = None) -> float:
+    """Effective off-chip bytes per cached token under CPQ ("transfer only
+    the non-zero KV cache"): non-zero payload + 1-bit occupancy map + level
+    byte per (token, head). Per-(level,channel) scale/zero are amortized and
+    excluded (they are O(L*H*D) per sequence, not per token)."""
+    keep = (1.0 - cfg.prune_ratio) if keep_frac is None else keep_frac
+    payload = keep * h * d * cfg.bits / 8.0
+    bitmap = h * d / 8.0
+    level = h * 1.0
+    return payload + bitmap + level
+
+
+def dense_bytes_per_token(h: int, d: int, dtype_bytes: int = 2) -> float:
+    return float(h * d * dtype_bytes)

@@ -1,0 +1,114 @@
+"""T1 — Matrix decomposition of scaled dot-product attention (paper §III).
+
+The paper's algebra (exact in real arithmetic):
+
+    scores = Q K^T = Q (X W_K)^T = (Q W_K^T) X^T          ... (score stage)
+    out    = S V   = S (X W_V)   = (S X) W_V              ... (value stage)
+
+On ReRAM this removes the crossbar writes of K^T/V. On TPU the cached operand
+becomes X (d_model per token) instead of K and V (2*kv*Dh per token): for MHA
+(kv*Dh == d_model) decode cache traffic HALVES, and one X read serves both
+stages. The extra FLOPs (the score/value stages run in d_model- instead of
+Dh-space) sit far below the v5e roofline ridge during decode — see DESIGN.md.
+
+RoPE: position-dependent rotations on K do not commute with W_K, so on RoPE
+architectures we use the decoupled form (exactly DeepSeek-MLA's solution,
+which DESIGN.md argues is an instance of this decomposition): a small slice
+of ``rope_dims`` per kv head is roped and cached verbatim alongside X, while
+the remaining (content) dims are position-free and decomposed. For
+absolute-position architectures (musicgen-large, opt-6.7b) rope_dims == 0 and
+the decomposition is EXACT vs dense attention (property-tested).
+
+GQA generalizes trivially: q heads group onto kv-head weight slices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _group(h: int, kv: int) -> int:
+    assert h % kv == 0, (h, kv)
+    return h // kv
+
+
+def decomposed_query_transform(q_nope: jax.Array, w_k_nope: jax.Array) -> jax.Array:
+    """Hoist W_K into the query: R = Q W_K^T (the paper's first cascaded MatMul).
+
+    q_nope:   (B, T, H, Dn)  content (un-roped) query dims
+    w_k_nope: (Dm, KV, Dn)   content slice of the K projection
+    returns   (B, T, H, Dm)
+    """
+    B, T, H, Dn = q_nope.shape
+    Dm, KV, _ = w_k_nope.shape
+    g = _group(H, KV)
+    qg = q_nope.reshape(B, T, KV, g, Dn)
+    r = jnp.einsum("btkgd,mkd->btkgm", qg, w_k_nope)
+    return r.reshape(B, T, H, Dm)
+
+
+def decomposed_scores(r: jax.Array, x_cache: jax.Array) -> jax.Array:
+    """Second cascaded MatMul: scores = R X^T.
+
+    r: (B, T, H, Dm), x_cache: (B, N, Dm) -> (B, T, H, N)."""
+    return jnp.einsum("bthm,bnm->bthn", r, x_cache)
+
+
+def decomposed_values(s: jax.Array, x_cache: jax.Array, w_v: jax.Array) -> jax.Array:
+    """Value stage: out = (S X) W_V.
+
+    s: (B, T, H, N) attention weights, x_cache: (B, N, Dm),
+    w_v: (Dm, KV, Dh) -> (B, T, H, Dh)."""
+    B, T, H, N = s.shape
+    Dm, KV, Dh = w_v.shape
+    g = _group(H, KV)
+    p = jnp.einsum("bthn,bnm->bthm", s, x_cache)  # P = S X
+    pg = p.reshape(B, T, KV, g, Dm)
+    out = jnp.einsum("btkgm,mkd->btkgd", pg, w_v)
+    return out.reshape(B, T, H, Dh)
+
+
+def decomposed_attention(
+    q_nope: jax.Array,      # (B, T, H, Dn) content query (post q-rope removal)
+    q_rope: jax.Array,      # (B, T, H, R) roped query slice (R may be 0)
+    x_cache: jax.Array,     # (B, N, Dm)
+    k_rope: jax.Array,      # (B, N, KV, R) roped key slice
+    w_k_nope: jax.Array,    # (Dm, KV, Dn)
+    w_v: jax.Array,         # (Dm, KV, Dh)
+    length: jax.Array,      # () int32 valid tokens
+    scale: float,
+    query_positions: jax.Array | None = None,  # (T,) absolute positions for causal mask
+) -> jax.Array:
+    """Full T1 attention over an X-cache. Returns (B, T, H, Dh)."""
+    B, T, H, _ = q_nope.shape
+    N = x_cache.shape[1]
+    KV = w_v.shape[1]
+    g = _group(H, KV)
+
+    r = decomposed_query_transform(q_nope, w_k_nope)
+    # R's Dm dim must match the X-cache sharding (model axis) — without this
+    # the SPMD partitioner all-gathers the whole X cache in f32 (measured
+    # 103 GB/device on musicgen decode_32k; EXPERIMENTS.md §Perf cell A)
+    r = constrain(r, "act_batch", None, None, "act_mlp")
+    s = decomposed_scores(r, x_cache)  # content scores (B,T,H,N)
+    if q_rope.shape[-1] > 0:
+        # rope keys may be per-kv-head (KV_r == KV) or shared (KV_r == 1, MLA)
+        kv_r = k_rope.shape[2]
+        g_r = _group(H, kv_r)
+        qg = q_rope.reshape(B, T, kv_r, g_r, q_rope.shape[-1])
+        s_rope = jnp.einsum("btkgr,bnkr->btkgn", qg, k_rope).reshape(B, T, H, N)
+        s = s + s_rope
+    s = s.astype(jnp.float32) * scale
+
+    pos_j = jnp.arange(N, dtype=jnp.int32)
+    ok = (pos_j[None, :] < length)  # (1, N): written slots
+    if query_positions is not None:
+        ok = ok & (pos_j[None, :] <= query_positions[:, None])  # (T, N) causal
+    s = jnp.where(ok[None, :, None, :], s, NEG_INF)
+
+    w = jax.nn.softmax(s, axis=-1).astype(x_cache.dtype)
+    return decomposed_values(w, x_cache, w_v)

@@ -1,0 +1,230 @@
+"""Memory-efficient (flash) attention in pure jnp with a CUSTOM VJP.
+
+Forward: online-softmax scan over KV chunks (saves out + logsumexp, never the
+(T x S) score matrix). Backward: flash-attention backward — recompute scores
+chunk-by-chunk from (q, k, v, out, lse); dq rides the scan carry, dk/dv are
+emitted per chunk. Without the custom VJP, autodiff through the scan saves
+every per-chunk softmax carry and memory explodes (measured 37GB/device for
+one layer of jamba train_4k — see EXPERIMENTS.md §Perf).
+
+This is the oracle (ref.py) for the Pallas flash kernel, and the production
+path for train/prefill on long sequences.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _pin_tiles(qs, ks, vs):
+    """Pin the chunked q/k/v scan inputs: heads sharded where divisible,
+    REPLICATED otherwise. Without this the partitioner propagates the
+    (model-sharded) projection output through the tile reshape as a
+    head_dim-contracted layout and ALL-REDUCES every score tile (measured
+    6.6 TB/device on phi4 prefill_32k, whose 24 heads don't divide the
+    16-way model axis — EXPERIMENTS.md §Perf cell B)."""
+    qs = constrain(qs, None, "act_batch", None, "act_heads", None)
+    ks = constrain(ks, None, "act_batch", None, "act_kv", None)
+    vs = constrain(vs, None, "act_batch", None, "act_kv", None)
+    return qs, ks, vs
+
+
+def _chunk_kv(x, kc):
+    B, S = x.shape[:2]
+    return x.reshape(B, S // kc, kc, *x.shape[2:]).swapaxes(0, 1)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, scale, causal=True, q_offset=0, kv_chunk=1024):
+    out, _ = _flash_fwd_impl(q, k, v, scale, causal, q_offset, kv_chunk)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, scale, causal, q_offset, kv_chunk, q_chunk=512):
+    """Two-level flash: outer scan over Q chunks, inner scan over KV chunks.
+
+    The online-softmax state is per-Q-CHUNK ((B, qc, ...) instead of
+    (B, T, ...)): carrying full-T state through the KV scan costs
+    nk * T * Dv * 4B of HBM traffic PER LAYER (measured as the dominant
+    memory-roofline term across every train/prefill cell — EXPERIMENTS.md
+    §Perf iteration 1); Q-chunking cuts it to the tile working set, exactly
+    like the Pallas kernel's VMEM accumulator."""
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // KV
+    kc = min(kv_chunk, S)
+    qc = min(q_chunk, T)
+    pad_k = (-S) % kc
+    pad_q = (-T) % qc
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    ks, vs = _chunk_kv(k, kc), _chunk_kv(v, kc)
+    kpos = jnp.arange(S + pad_k, dtype=jnp.int32).reshape(-1, kc)
+    qs = q.reshape(B, (T + pad_q) // qc, qc, H, Dh).swapaxes(0, 1)
+    qs, ks, vs = _pin_tiles(qs, ks, vs)
+    qpos_all = (jnp.arange(T + pad_q, dtype=jnp.int32) + q_offset).reshape(-1, qc)
+
+    def q_block(_, q_inp):
+        qb, qp = q_inp                       # (B, qc, H, Dh), (qc,)
+        qg = qb.reshape(B, qc, KV, g, Dh)
+
+        def body(acc, inp):
+            m, l, o = acc
+            kb, vb, kp = inp
+            s = jnp.einsum("btkgd,bskd->btkgs", qg, kb).astype(jnp.float32) * scale
+            mask = kp[None, :] < S
+            if causal:
+                mask = mask & (kp[None, :] <= qp[:, None])
+            else:
+                mask = jnp.broadcast_to(mask, (qc, kc))
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m2)
+            p = jnp.exp(s - m2[..., None])
+            l2 = l * corr + jnp.sum(p, axis=-1)
+            o2 = o * corr[..., None] + jnp.einsum(
+                "btkgs,bskd->btkgd", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m2, l2, o2), None
+
+        m0 = jnp.full((B, qc, KV, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, KV, g), jnp.float32)
+        o0 = jnp.zeros((B, qc, KV, g, Dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (ks, vs, kpos))
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).reshape(B, qc, H, Dv)
+        lse = (m + jnp.log(jnp.maximum(l, 1e-30))).reshape(B, qc, H)
+        return (), (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_block, (), (qs, qpos_all))
+    out = outs.swapaxes(0, 1).reshape(B, T + pad_q, H, Dv)[:, :T]
+    lse = lses.swapaxes(0, 1).reshape(B, T + pad_q, H)[:, :T]
+    return out, lse
+
+
+def _flash_fwd(q, k, v, scale, causal, q_offset, kv_chunk):
+    out, lse = _flash_fwd_impl(q, k, v, scale, causal, q_offset, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(scale, causal, q_offset, kv_chunk, res, dout, q_chunk=512):
+    """Two-pass tiled flash backward (the standard schedule):
+      pass 1 (KV-outer): recompute per-tile scores, accumulate (dk, dv) per
+              KV chunk — inner Q scan carries only the (B, kc, ...) tile;
+      pass 2 (Q-outer):  dq per Q chunk — inner KV scan carries (B, qc, ...).
+    No full-(T|S) f32 state ever rides a scan carry (the bytes-roofline fix,
+    EXPERIMENTS.md §Perf)."""
+    q, k, v, out, lse = res
+    B, T, H, Dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // KV
+    kc = min(kv_chunk, S)
+    qc = min(q_chunk, T)
+    pad_k = (-S) % kc
+    pad_q = (-T) % qc
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    ks, vs = _chunk_kv(k, kc), _chunk_kv(v, kc)
+    ks = constrain(ks, None, "act_batch", None, "act_kv", None)
+    vs = constrain(vs, None, "act_batch", None, "act_kv", None)
+    kpos = jnp.arange(S + pad_k, dtype=jnp.int32).reshape(-1, kc)
+
+    dog = dout.reshape(B, T, KV, g, Dv).astype(jnp.float32)
+    og = out.reshape(B, T, KV, g, Dv).astype(jnp.float32)
+    D = jnp.sum(dog * og, axis=-1)  # (B, T, KV, g)
+
+    def padq(a):
+        return jnp.pad(a, [(0, 0), (0, pad_q)] + [(0, 0)] * (a.ndim - 2)) \
+            if pad_q else a
+
+    nq = (T + pad_q) // qc
+    qs = padq(q).reshape(B, nq, qc, KV, g, Dh).swapaxes(0, 1)
+    dos = padq(dout.reshape(B, T, KV, g, Dv).astype(jnp.float32)
+               ).reshape(B, nq, qc, KV, g, Dv).swapaxes(0, 1)
+    lses = padq(lse.reshape(B, T, KV, g) + 0.0).reshape(B, nq, qc, KV, g).swapaxes(0, 1)
+    Ds = padq(D).reshape(B, nq, qc, KV, g).swapaxes(0, 1)
+    qpos = (jnp.arange(T + pad_q, dtype=jnp.int32) + q_offset).reshape(nq, qc)
+    qvalid = (jnp.arange(T + pad_q, dtype=jnp.int32) < T).reshape(nq, qc)
+
+    def _tile(qb, dob, lseb, Db, qp, qv, kb, vb, kp):
+        """Shared per-(q-tile, kv-tile) math. Returns (p, ds)."""
+        s = jnp.einsum("btkgd,bskd->btkgs", qb, kb).astype(jnp.float32) * scale
+        mask = (kp[None, :] < S) & qv[:, None]
+        if causal:
+            mask = mask & (kp[None, :] <= qp[:, None])
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lseb[..., None])
+        dp = jnp.einsum("btkgd,bskd->btkgs", dob, vb.astype(jnp.float32))
+        ds = p * (dp - Db[..., None]) * scale
+        return p, ds
+
+    # ---- pass 1: dk, dv (KV-outer)
+    def kv_outer(_, kv_inp):
+        kb, vb, kp = kv_inp
+
+        def q_inner(acc, q_inp):
+            dk_c, dv_c = acc
+            qb, dob, lseb, Db, qp, qv = q_inp
+            p, ds = _tile(qb, dob, lseb, Db, qp, qv, kb, vb, kp)
+            dk_c = dk_c + jnp.einsum("btkgs,btkgd->bskd", ds, qb.astype(jnp.float32))
+            dv_c = dv_c + jnp.einsum("btkgs,btkgd->bskd", p, dob)
+            return (dk_c, dv_c), None
+
+        z = (jnp.zeros((B, kc, KV, Dh), jnp.float32),
+             jnp.zeros((B, kc, KV, Dv), jnp.float32))
+        (dk_c, dv_c), _ = jax.lax.scan(q_inner, z, (qs, dos, lses, Ds, qpos, qvalid))
+        return (), (dk_c, dv_c)
+
+    _, (dks, dvs) = jax.lax.scan(kv_outer, (), (ks, vs, kpos))
+    dk = dks.swapaxes(0, 1).reshape(B, S + pad_k, KV, Dh)[:, :S]
+    dv = dvs.swapaxes(0, 1).reshape(B, S + pad_k, KV, Dv)[:, :S]
+
+    # ---- pass 2: dq (Q-outer)
+    def q_outer(_, q_inp):
+        qb, dob, lseb, Db, qp, qv = q_inp
+
+        def kv_inner(dq_c, kv_inp):
+            kb, vb, kp = kv_inp
+            _, ds = _tile(qb, dob, lseb, Db, qp, qv, kb, vb, kp)
+            return dq_c + jnp.einsum("btkgs,bskd->btkgd", ds,
+                                     kb.astype(jnp.float32)), None
+
+        dq0 = jnp.zeros((B, qc, KV, g, Dh), jnp.float32)
+        dq_c, _ = jax.lax.scan(kv_inner, dq0, (ks, vs, kpos))
+        return (), dq_c
+
+    _, dqs = jax.lax.scan(q_outer, (), (qs, dos, lses, Ds, qpos, qvalid))
+    dq = dqs.swapaxes(0, 1).reshape(B, T + pad_q, KV, g, Dh)[:, :T]
+    return (dq.reshape(B, T, H, Dh).astype(q.dtype), dk.astype(k.dtype),
+            dv.astype(v.dtype))
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention_ref(q, k, v, scale, causal=True, q_chunk=512, kv_chunk=1024,
+                        q_offset=0):
+    """Back-compat wrapper (q_chunk kept for API stability; unused)."""
+    return flash_attention(q, k, v, scale, causal, q_offset, kv_chunk)
+
+
+def attention_auto(q, k, v, scale, causal=True, q_offset=0, kv_length=None,
+                   flash_threshold: int = 1024):
+    """Dispatch: exact dense oracle for small shapes, flash beyond."""
+    from repro.core.attention import dense_attention
+
+    T, S = q.shape[1], k.shape[1]
+    if kv_length is not None or max(T, S) <= flash_threshold:
+        return dense_attention(q, k, v, scale, causal=causal, q_offset=q_offset,
+                               kv_length=kv_length)
+    return flash_attention(q, k, v, scale, causal, q_offset)

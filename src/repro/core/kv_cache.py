@@ -1,0 +1,149 @@
+"""Decode-cache containers for every attention mode.
+
+All containers are NamedTuple pytrees with a static arena size ``n_max`` and
+a scalar ``length`` (number of valid tokens; decode writes at slot
+``length``). Shapes:
+
+  B = batch, N = n_max, H = query heads, KV = kv heads, Dh = head_dim,
+  Dm = d_model, R = decoupled-rope dims (T1 on RoPE archs), Dp = proxy dims.
+
+Mode -> container:
+  dense      DenseKVCache   K,V                      2*KV*Dh        per token
+  decomposed XCache         X (+ small roped keys)   Dm + KV*R      per token (T1)
+  cpq        CPQKVCache     CPQ(K), CPQ(V)           ~2*KV*Dh*b/8   per token (T2)
+  retrieval  RetrievalCache K,V + int8 proxy codes   2*KV*Dh + Dp   per token (T3)
+  cpq+decomp CPQXCache      CPQ(X) (+ roped keys)    ~Dm*b/8        per token (T1+T2)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CPQCfg, RetrievalCfg
+from repro.core import cpq as cpq_lib
+
+
+class DenseKVCache(NamedTuple):
+    k: jax.Array        # (B, N, KV, Dh)
+    v: jax.Array        # (B, N, KV, Dh)
+    length: jax.Array   # () int32
+
+
+class XCache(NamedTuple):
+    """T1: cache the layer input X instead of K and V (paper §III)."""
+
+    x: jax.Array        # (B, N, Dm) — the exact input to the K/V projections
+    k_rope: jax.Array   # (B, N, KV, R) — decoupled roped key slice (R may be 0)
+    length: jax.Array
+
+
+class CPQKVCache(NamedTuple):
+    k: cpq_lib.CPQTensor
+    v: cpq_lib.CPQTensor
+    length: jax.Array
+
+
+class RetrievalCache(NamedTuple):
+    k: jax.Array            # (B, N, KV, Dh)
+    v: jax.Array            # (B, N, KV, Dh)
+    proxy: jax.Array        # (B, N, KV, Dp) int8 proxy codes (CAM analogue)
+    proxy_scale: jax.Array  # (B, KV, Dp) f32
+    proxy_zero: jax.Array   # (B, KV, Dp) f32
+    length: jax.Array
+
+
+class CPQXCache(NamedTuple):
+    x: cpq_lib.CPQTensor    # quantized X arena, channels = Dm split as (H=1, D=Dm)
+    k_rope: jax.Array       # (B, N, KV, R)
+    length: jax.Array
+
+
+Cache = DenseKVCache | XCache | CPQKVCache | RetrievalCache | CPQXCache
+
+
+# ------------------------------------------------------------------- helpers
+
+
+def valid_mask(length: jax.Array, n_max: int) -> jax.Array:
+    """(N,) bool — True for written slots."""
+    return jnp.arange(n_max, dtype=jnp.int32) < length
+
+
+def append_tokens(arena: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write ``new`` (B, T, ...) into ``arena`` (B, N, ...) at token slot pos."""
+    return jax.lax.dynamic_update_slice_in_dim(arena, new.astype(arena.dtype), pos, axis=1)
+
+
+# ------------------------------------------------------------- constructors
+
+
+def init_dense(batch: int, n_max: int, kv: int, dh: int, dtype=jnp.bfloat16) -> DenseKVCache:
+    z = jnp.zeros((batch, n_max, kv, dh), dtype)
+    return DenseKVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+def init_x(batch: int, n_max: int, dm: int, kv: int, rope_dims: int,
+           dtype=jnp.bfloat16) -> XCache:
+    return XCache(
+        x=jnp.zeros((batch, n_max, dm), dtype),
+        k_rope=jnp.zeros((batch, n_max, kv, rope_dims), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _empty_cpq(batch: int, n_max: int, h: int, d: int, cfg: CPQCfg) -> cpq_lib.CPQTensor:
+    return cpq_lib.CPQTensor(
+        codes=jnp.zeros((batch, n_max, h, d), jnp.int8),
+        scale=jnp.zeros((batch, cfg.max_levels, h, d), jnp.float32),
+        zero=jnp.zeros((batch, cfg.max_levels, h, d), jnp.float32),
+        level=jnp.zeros((batch, n_max, h), jnp.int32),
+        num_levels=jnp.ones((batch, h), jnp.int32),
+        prune_thr=jnp.zeros((batch, h, d), jnp.float32),
+    )
+
+
+def init_cpq(batch: int, n_max: int, kv: int, dh: int, cfg: CPQCfg) -> CPQKVCache:
+    return CPQKVCache(
+        k=_empty_cpq(batch, n_max, kv, dh, cfg),
+        v=_empty_cpq(batch, n_max, kv, dh, cfg),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_retrieval(batch: int, n_max: int, kv: int, dh: int, cfg: RetrievalCfg,
+                   dtype=jnp.bfloat16) -> RetrievalCache:
+    dp = cfg.proxy_dim or dh
+    z = jnp.zeros((batch, n_max, kv, dh), dtype)
+    return RetrievalCache(
+        k=z,
+        v=z,
+        proxy=jnp.zeros((batch, n_max, kv, dp), jnp.int8),
+        proxy_scale=jnp.ones((batch, kv, dp), jnp.float32),
+        proxy_zero=jnp.zeros((batch, kv, dp), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_cpq_x(batch: int, n_max: int, dm: int, kv: int, rope_dims: int,
+               cfg: CPQCfg, dtype=jnp.bfloat16) -> CPQXCache:
+    return CPQXCache(
+        x=_empty_cpq(batch, n_max, 1, dm, cfg),
+        k_rope=jnp.zeros((batch, n_max, kv, rope_dims), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def bytes_per_token(cache: Cache) -> float:
+    """Off-chip traffic per cached token (payload view; see cpq_bytes_per_token
+    for the CPQ accounting)."""
+    if isinstance(cache, DenseKVCache):
+        return 2.0 * cache.k.shape[2] * cache.k.shape[3] * cache.k.dtype.itemsize
+    if isinstance(cache, XCache):
+        return (cache.x.shape[2] * cache.x.dtype.itemsize
+                + cache.k_rope.shape[2] * cache.k_rope.shape[3] * cache.k_rope.dtype.itemsize)
+    if isinstance(cache, RetrievalCache):
+        return (2.0 * cache.k.shape[2] * cache.k.shape[3] * cache.k.dtype.itemsize
+                + cache.proxy.shape[2] * cache.proxy.shape[3])
+    raise TypeError(type(cache))

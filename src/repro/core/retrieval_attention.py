@@ -1,0 +1,163 @@
+"""T3 — Attention as nearest-neighbor retrieval (paper §V).
+
+Two-stage reformulation of SDA:
+  (1) *proxy similarity*: a cheap associative-match pass over ALL keys —
+      the CAM analogue. On TPU we realize the CAM with an int8 (or low-rank)
+      code matmul on the MXU: per-channel-quantized key codes are scored
+      against the quantized query. Traffic: 1 byte (or Dp bytes) per key
+      channel instead of 2; MACs are int8.
+  (2) *calibrated re-scoring*: exact bf16 attention restricted to the top-K
+      candidates (plus an always-attended recent window), with optional mass
+      calibration that rescales the output by the proxy-estimated fraction of
+      softmax mass captured by the selected set.
+
+Complexity: dense similarity O(N * Dh) per query in bf16 becomes
+O(N * Dp) int8 + O(K * Dh) bf16; V reads drop from N to K.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RetrievalCfg
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------- proxy encoding
+
+
+def fit_proxy(k: jax.Array, bits: int = 8):
+    """Per-channel affine int8 code fit for keys. k: (B, N, KV, Dp_src).
+
+    Returns (codes int8, scale (B,KV,Dp), zero (B,KV,Dp))."""
+    kf = k.astype(jnp.float32)
+    lo = jnp.min(kf, axis=1)
+    hi = jnp.max(kf, axis=1)
+    steps = (1 << bits) - 1
+    scale = jnp.maximum((hi - lo) / steps, 1e-8)
+    codes = jnp.clip(jnp.round((kf - lo[:, None]) / scale[:, None]), 0, steps)
+    return (codes - 128).astype(jnp.int8), scale, lo
+
+
+def encode_proxy(k_t: jax.Array, scale: jax.Array, zero: jax.Array, bits: int = 8):
+    """Encode new tokens with existing proxy parameters. k_t: (B, T, KV, Dp)."""
+    steps = (1 << bits) - 1
+    codes = jnp.clip(jnp.round((k_t.astype(jnp.float32) - zero[:, None]) / scale[:, None]),
+                     0, steps)
+    return (codes - 128).astype(jnp.int8)
+
+
+def proxy_scores(q: jax.Array, codes: jax.Array, scale: jax.Array, zero: jax.Array) -> jax.Array:
+    """Approximate q.K^T from codes. q: (B,T,H,Dp), codes: (B,N,KV,Dp).
+
+    score ~= sum_d q_d * (code_d * scale_d + zero_d)
+           = (q * scale) . code  +  q . zero        (second term is per-query)
+    Returns (B, T, H, N) in f32.
+    """
+    B, T, H, Dp = q.shape
+    KV = codes.shape[2]
+    g = H // KV
+    qf = q.astype(jnp.float32).reshape(B, T, KV, g, Dp)
+    c = (codes.astype(jnp.float32) + 128.0)
+    s = jnp.einsum("btkgd,bkd,bnkd->btkgn", qf, scale, c)
+    s = s + jnp.einsum("btkgd,bkd->btkg", qf, zero)[..., None]
+    return s.reshape(B, T, H, codes.shape[1])
+
+
+# --------------------------------------------------------------- retrieval
+
+
+def select_topk(
+    s_proxy: jax.Array,    # (B, T, H, N) proxy scores
+    length: jax.Array,     # () valid tokens
+    cfg: RetrievalCfg,
+    query_positions: jax.Array | None = None,
+) -> jax.Array:
+    """Top-K candidate indices per (B, T, H): (B, T, H, K) int32.
+
+    The most recent ``recent_window`` tokens get +inf bias so the dense local
+    tail is always attended (standard retrieval-attention practice; keeps the
+    calibration well-conditioned)."""
+    N = s_proxy.shape[-1]
+    pos_j = jnp.arange(N, dtype=jnp.int32)
+    ok = pos_j[None, :] < length
+    if query_positions is not None:
+        ok = ok & (pos_j[None, :] <= query_positions[:, None])
+    s = jnp.where(ok[None, :, None, :], s_proxy, NEG_INF)
+    recent = pos_j[None, :] >= (length - cfg.recent_window)
+    if query_positions is not None:
+        recent = pos_j[None, :] >= (query_positions[:, None] - cfg.recent_window + 1)
+    s = jnp.where((recent & ok)[None, :, None, :], jnp.float32(1e20), s)
+    k = min(cfg.top_k, N)
+    _, idx = jax.lax.top_k(s, k)
+    return idx.astype(jnp.int32)
+
+
+def gather_kv(k: jax.Array, v: jax.Array, idx: jax.Array):
+    """Gather per-head candidates. k,v: (B,N,KV,Dh); idx: (B,T,H,K).
+
+    Returns k_sel, v_sel: (B, T, H, K, Dh)."""
+    B, N, KV, Dh = k.shape
+    _, T, H, K = idx.shape
+    g = H // KV
+    idx_kv = idx.reshape(B, T, KV, g, K)
+
+    def take(x):
+        # x: (B, N, KV, Dh) -> (B, KV, N, Dh)
+        xt = x.swapaxes(1, 2)
+        out = jnp.take_along_axis(
+            xt[:, :, None, None],                      # (B, KV, 1, 1, N, Dh)
+            idx_kv.transpose(0, 2, 1, 3, 4)[..., None],  # (B, KV, T, g, K, 1)
+            axis=4,
+        )  # (B, KV, T, g, K, Dh)
+        return out.transpose(0, 2, 1, 3, 4, 5).reshape(B, T, H, K, Dh)
+
+    return take(k), take(v)
+
+
+def retrieval_attention(
+    q: jax.Array,          # (B, T, H, Dh) roped query
+    k: jax.Array,          # (B, N, KV, Dh) roped keys (arena)
+    v: jax.Array,          # (B, N, KV, Dh)
+    proxy_codes: jax.Array,
+    proxy_scale: jax.Array,
+    proxy_zero: jax.Array,
+    length: jax.Array,
+    cfg: RetrievalCfg,
+    scale: float,
+    query_positions: jax.Array | None = None,
+    calibrate: bool = True,
+) -> jax.Array:
+    """Full T3 pipeline. Returns (B, T, H, Dh)."""
+    B, T, H, Dh = q.shape
+
+    q_proxy = q if cfg.proxy_dim == 0 else q[..., : cfg.proxy_dim]
+    sp = proxy_scores(q_proxy * scale, proxy_codes, proxy_scale, proxy_zero)
+    idx = select_topk(sp, length, cfg, query_positions)
+    k_sel, v_sel = gather_kv(k, v, idx)
+
+    s = jnp.einsum("bthd,bthkd->bthk", q, k_sel).astype(jnp.float32) * scale
+    # mask candidates that duplicated an invalid slot (length < K edge case)
+    ok = idx < length
+    if query_positions is not None:
+        ok = ok & (idx <= query_positions[None, :, None, None])
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+
+    if calibrate:
+        # proxy-estimated fraction of total softmax mass captured by the
+        # selected set -> rescale so dropped tail is accounted for.
+        pos_j = jnp.arange(sp.shape[-1], dtype=jnp.int32)
+        okn = pos_j[None, :] < length
+        if query_positions is not None:
+            okn = okn & (pos_j[None, :] <= query_positions[:, None])
+        spm = jnp.where(okn[None, :, None, :], sp, NEG_INF)
+        m = jnp.max(spm, axis=-1, keepdims=True)
+        denom_all = jnp.sum(jnp.exp(spm - m), axis=-1)
+        sp_sel = jnp.take_along_axis(spm, idx, axis=-1)
+        denom_sel = jnp.sum(jnp.exp(sp_sel - m), axis=-1)
+        frac = jnp.clip(denom_sel / jnp.maximum(denom_all, 1e-30), 0.0, 1.0)
+        w = w * frac[..., None]
+
+    return jnp.einsum("bthk,bthkd->bthd", w.astype(v.dtype), v_sel)

@@ -1,0 +1,49 @@
+"""T1b — Sub-matrix pipeline (paper §III-B), TPU adaptation + schedule model.
+
+On ReRAM the sub-matrix pipeline streams row-blocks of Q through two
+crossbars so both stay busy. The TPU analogues (see DESIGN.md §2):
+
+  1. *kernel fusion* — the Pallas decomposed-attention kernel streams X
+     blocks through both cascaded MatMuls per grid step (never materializing
+     R = Q·W_Kᵀ scores in HBM); realized in kernels/decomposed_attn.
+  2. *collective overlap* — for sequence-parallel caches, per-block
+     ``ppermute`` of the next X block overlaps with compute on the current
+     one; realized in distributed/collectives.py (flash-decoding combine).
+
+This module keeps the *analytical schedule model* used by
+benchmarks/bench_pipeline.py to reproduce the paper's Fig. 3 utilization
+comparison: layer-level pipeline vs sub-matrix pipeline for the two cascaded
+MatMuls R = Q·W_Kᵀ and Out = R·Xᵀ.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class StageCost:
+    """Per-sub-matrix execution time of one pipeline stage (arbitrary units)."""
+
+    t_stage1: float  # one Q sub-block through W_K^T
+    t_stage2: float  # one R sub-block through X^T
+
+
+def layer_level_latency(n_sub: int, c: StageCost) -> float:
+    """Stage 2 starts only after ALL of stage 1 finished (Fig. 3a)."""
+    return n_sub * c.t_stage1 + n_sub * c.t_stage2
+
+
+def submatrix_latency(n_sub: int, c: StageCost) -> float:
+    """Stage 2 starts as soon as the first sub-block of R exists (Fig. 3b)."""
+    bottleneck = max(c.t_stage1, c.t_stage2)
+    return c.t_stage1 + n_sub * bottleneck + (c.t_stage2 if c.t_stage1 > c.t_stage2 else 0.0)
+
+
+def utilization(n_sub: int, c: StageCost, latency: float) -> float:
+    """Fraction of (2 units x latency) spent doing useful work."""
+    work = n_sub * (c.t_stage1 + c.t_stage2)
+    return work / (2.0 * latency)
+
+
+def speedup(n_sub: int, c: StageCost) -> float:
+    return layer_level_latency(n_sub, c) / submatrix_latency(n_sub, c)

@@ -1,0 +1,88 @@
+"""PartitionSpec trees for decode caches, mirroring models.model.init_caches.
+
+Sharding strategy (see rules.py): batch over (pod,)data; feature dims (head
+dim / latent dim / d_inner) over model so one-token cache writes stay local;
+for batch==1 long-context shapes the token arena is sharded over the axes the
+batch cannot use.
+"""
+from __future__ import annotations
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import AttentionRuntime, ModelConfig
+from repro.models import transformer as tfm
+
+
+def _cpq_tensor_specs(b, s):
+    from repro.core.cpq import CPQTensor
+    return CPQTensor(
+        codes=P(b, s, None, "model"),
+        scale=P(b, None, None, "model"),
+        zero=P(b, None, None, "model"),
+        level=P(b, s, None),
+        num_levels=P(b, None),
+        prune_thr=P(b, None, "model"),
+    )
+
+
+def layer_cache_specs(cfg: ModelConfig, rt: AttentionRuntime, kind, b, s):
+    """b: mesh axes for batch (str/tuple/None); s: mesh axes for token arena."""
+    from repro.core import kv_cache as kvc
+    from repro.models.mamba import MambaState
+    from repro.models.xlstm import MLSTMState, SLSTMState
+
+    mixer, _ = kind
+    if mixer == "xattn":
+        return kvc.DenseKVCache(k=P(b, None, None, "model"),
+                                v=P(b, None, None, "model"), length=P())
+    if mixer == "mla":
+        if rt.mode == "cpq":
+            return kvc.CPQXCache(x=_cpq_tensor_specs(b, s),
+                                 k_rope=P(b, s, None, None), length=P())
+        return kvc.XCache(x=P(b, s, "model"), k_rope=P(b, s, None, None), length=P())
+    if mixer == "attn":
+        if rt.mode == "dense":
+            return kvc.DenseKVCache(k=P(b, s, None, "model"),
+                                    v=P(b, s, None, "model"), length=P())
+        if rt.mode == "decomposed":
+            return kvc.XCache(x=P(b, s, "model"), k_rope=P(b, s, None, None), length=P())
+        if rt.mode == "decomposed_cpq":
+            return kvc.CPQXCache(x=_cpq_tensor_specs(b, s),
+                                 k_rope=P(b, s, None, None), length=P())
+        if rt.mode == "cpq":
+            return kvc.CPQKVCache(k=_cpq_tensor_specs(b, s),
+                                  v=_cpq_tensor_specs(b, s), length=P())
+        if rt.mode == "retrieval":
+            return kvc.RetrievalCache(
+                k=P(b, s, None, "model"), v=P(b, s, None, "model"),
+                proxy=P(b, s, None, "model"),
+                proxy_scale=P(b, None, "model"), proxy_zero=P(b, None, "model"),
+                length=P())
+        raise ValueError(rt.mode)
+    if mixer == "mamba":
+        return MambaState(conv=P(b, None, "model"), h=P(b, "model", None))
+    if mixer == "mlstm":
+        return MLSTMState(C=P(b, None, None, "model"), n=P(b, None, "model"),
+                          m=P(b, None), conv=P(b, None, "model"))
+    if mixer == "slstm":
+        return SLSTMState(c=P(b, "model"), n=P(b, "model"),
+                          h=P(b, "model"), m=P(b, "model"))
+    raise ValueError(mixer)
+
+
+def cache_pspecs(cfg: ModelConfig, rt: AttentionRuntime, batch_axes, seq_axes):
+    """Spec tree matching models.model.init_caches output."""
+    import jax
+
+    b = batch_axes if batch_axes else None
+    s = seq_axes if seq_axes else None
+
+    prefix = [layer_cache_specs(cfg, rt, k, b, s) for k in cfg.prefix_pattern]
+
+    def stacked(kind):
+        one = layer_cache_specs(cfg, rt, kind, b, s)
+        return jax.tree.map(lambda sp: P(None, *sp), one,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    blocks = [stacked(k) for k in cfg.block_pattern]
+    return {"prefix": prefix, "blocks": blocks}

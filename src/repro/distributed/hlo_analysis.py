@@ -1,0 +1,288 @@
+"""Post-SPMD HLO analysis: trip-count-aware FLOPs / HBM-bytes / collective
+traffic for the roofline.
+
+Why not ``compiled.cost_analysis()``: XLA counts while-loop bodies ONCE, so a
+scan-over-layers model (how this framework lowers every decoder stack) is
+under-reported by ~num_blocks x (validated in EXPERIMENTS.md §Dry-run).
+
+We parse the optimized HLO text instead:
+  * ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` —
+    exact for lax.scan loops;
+  * FLOPs: dot (2 * result_elems * contraction_size) and convolution
+    (2 * out_elems * kernel_elems / out_features). Elementwise FLOPs are
+    ignored (<2% of any matmul-bearing model here);
+  * HBM bytes: per top-level instruction, result + operand payloads (a
+    post-fusion instruction ~ one kernel; fusion internals never touch HBM);
+  * collectives: payload bytes per kind (all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute), ``-start`` counted,
+    ``-done`` skipped.
+
+All quantities are PER DEVICE (the SPMD program is per-device).
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u1": 0.125,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id",
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(
+    r"(?:to_apply|true_computation|false_computation)=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_FGC_RE = re.compile(r"feature_group_count=(\d+)")
+_COND_CONST_RE = re.compile(r"=\s*[su]32\[\]\s*constant\((\d+)\)")
+
+
+def _shape_arrays(shape_str: str) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for dt, dims in _ARRAY_RE.findall(shape_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _shape_bytes_sum(shape_str: str) -> float:
+    return sum(math.prod(d) * _DTYPE_BYTES[dt] if d else _DTYPE_BYTES[dt]
+               for dt, d in _shape_arrays(shape_str))
+
+
+def _shape_bytes_max(shape_str: str) -> float:
+    best = 0.0
+    for dt, d in _shape_arrays(shape_str):
+        best = max(best, (math.prod(d) if d else 1) * _DTYPE_BYTES[dt])
+    return best
+
+
+@dataclass
+class _Instr:
+    name: str
+    op: str
+    shape_str: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # instr name -> shape_str
+    consts: list = field(default_factory=list)
+
+
+def _parse(text: str) -> tuple[dict[str, "_Comp"], str | None]:
+    comps: dict[str, _Comp] = {}
+    entry_name = None
+    cur: _Comp | None = None
+    depth = 0
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            if not stripped.endswith("{"):
+                continue
+            m = _COMP_HDR_RE.match(stripped)
+            if m:
+                cur = _Comp(m.group(1))
+                depth = 1
+                if stripped.startswith("ENTRY"):
+                    entry_name = cur.name
+            continue
+        depth += stripped.count("{") - stripped.count("}")
+        if depth <= 0:
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, op, rest = m.groups()
+        # operand list = everything up to the matching close paren
+        par = 0
+        end = len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                par += 1
+            elif ch == ")":
+                if par == 0:
+                    end = i
+                    break
+                par -= 1
+        operand_str, attrs = rest[:end], rest[end + 1:]
+        operands = _OPERAND_RE.findall(operand_str)
+        cur.instrs.append(_Instr(name, op, shape_str, operands, attrs))
+        cur.shapes[name] = shape_str
+        if op == "constant":
+            cm = _COND_CONST_RE.search(stripped)
+            if cm:
+                cur.consts.append(int(cm.group(1)))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry_name
+
+
+def _dot_flops(c: _Comp, ins: _Instr) -> float:
+    res = _shape_arrays(ins.shape_str)
+    if not res:
+        return 0.0
+    out_elems = math.prod(res[0][1]) if res[0][1] else 1
+    lhs_shape = ()
+    if ins.operands:
+        lhs_str = c.shapes.get(ins.operands[0], "")
+        arr = _shape_arrays(lhs_str)
+        if arr:
+            lhs_shape = arr[0][1]
+    cm = _CONTRACT_RE.search(ins.attrs)
+    contract = 1
+    if cm and lhs_shape:
+        for idx in (int(i) for i in cm.group(1).split(",") if i):
+            if idx < len(lhs_shape):
+                contract *= lhs_shape[idx]
+    return 2.0 * out_elems * contract
+
+
+def _conv_flops(c: _Comp, ins: _Instr) -> float:
+    res = _shape_arrays(ins.shape_str)
+    if not res or len(ins.operands) < 2:
+        return 0.0
+    out_elems = math.prod(res[0][1]) if res[0][1] else 1
+    ker = _shape_arrays(c.shapes.get(ins.operands[1], ""))
+    if not ker:
+        return 0.0
+    kelems = math.prod(ker[0][1]) if ker[0][1] else 1
+    # approximate: per-output work = kernel elems / output features
+    out_feat = ker[0][1][-1] if ker[0][1] else 1
+    return 2.0 * out_elems * kelems / max(out_feat, 1)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: dict = field(default_factory=dict)
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives.values())
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.flops * k, self.bytes * k,
+                       defaultdict(float, {kk: v * k for kk, v in self.collectives.items()}))
+
+    def __add__(self, o: "HloCost") -> "HloCost":
+        coll = defaultdict(float, self.collectives)
+        for k, v in o.collectives.items():
+            coll[k] += v
+        return HloCost(self.flops + o.flops, self.bytes + o.bytes, coll)
+
+
+def analyze(hlo_text: str) -> HloCost:
+    comps, entry = _parse(hlo_text)
+    if entry is None:
+        for name in comps:
+            if "main" in name:
+                entry = name
+                break
+        else:
+            return HloCost()
+    memo: dict[str, HloCost] = {}
+
+    def eff(name: str, stack=()) -> HloCost:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return HloCost()
+        c = comps[name]
+        tot = HloCost(collectives=defaultdict(float))
+        for ins in c.instrs:
+            base = ins.op
+            is_done = base.endswith("-done")
+            root = base[:-6] if base.endswith("-start") else (
+                base[:-5] if is_done else base)
+            if root in COLLECTIVES:
+                if not is_done:
+                    tot.collectives[root] += _shape_bytes_max(ins.shape_str)
+                    # payload also moves through HBM
+                    tot.bytes += 2 * _shape_bytes_max(ins.shape_str)
+                continue
+            if ins.op == "dot":
+                tot.flops += _dot_flops(c, ins)
+            elif ins.op == "convolution":
+                tot.flops += _conv_flops(c, ins)
+            if ins.op == "while":
+                wm = _WHILE_ATTR_RE.search(ins.attrs)
+                trip = 1
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trip = int(tm.group(1))
+                elif wm and wm.group(1) in comps and comps[wm.group(1)].consts:
+                    trip = max(comps[wm.group(1)].consts)
+                if wm:
+                    sub = eff(wm.group(2), stack + (name,)) + \
+                        eff(wm.group(1), stack + (name,))
+                    tot = tot + sub.scaled(trip)
+                continue
+            if ins.op in ("fusion", "call", "conditional", "custom-call",
+                          "reduce", "map", "sort", "scatter", "select-and-scatter"):
+                for rex in (_CALLS_RE, _TO_APPLY_RE):
+                    for cm in rex.finditer(ins.attrs):
+                        sub = eff(cm.group(1), stack + (name,))
+                        # fusion/reduce bodies never touch HBM: take their
+                        # FLOPs and collectives, not their bytes
+                        tot.flops += sub.flops
+                        for k, v in sub.collectives.items():
+                            tot.collectives[k] += v
+                        if ins.op in ("call", "conditional"):
+                            tot.bytes += sub.bytes
+            if ins.op in _SKIP_BYTES_OPS:
+                continue
+            b = _shape_bytes_sum(ins.shape_str)
+            for opn in ins.operands:
+                if opn in c.shapes:
+                    b += _shape_bytes_sum(c.shapes[opn])
+            tot.bytes += b
+        memo[name] = HloCost(tot.flops, tot.bytes, dict(tot.collectives))
+        return memo[name]
+
+    return eff(entry)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    return analyze(hlo_text).collectives
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return analyze(hlo_text).collective_total
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    out = []
+    for m in _TRIP_RE.finditer(hlo_text):
+        out.append(int(m.group(1)))
+    return out

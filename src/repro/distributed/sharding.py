@@ -1,0 +1,82 @@
+"""Logical-axis sharding context.
+
+Model code calls ``constrain(x, *logical_axes)`` at the few places where
+activation sharding matters (post-QKV, MLP hidden, logits, caches). Outside a
+sharding context (CPU unit tests) this is a no-op; inside (train/serve/dryrun)
+it resolves logical axis names -> mesh axes through the active rule set and
+applies ``with_sharding_constraint``.
+
+Rule sets map a logical axis name to a mesh axis, a tuple of mesh axes, or
+None (replicated). Separate rule sets exist for parameters vs activations and
+for train vs serve — see ``repro.distributed.rules``.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_CTX: contextvars.ContextVar[Optional[tuple[Mesh, dict]]] = contextvars.ContextVar(
+    "shard_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: dict):
+    """Activate (mesh, activation-rules) for constrain() inside jit traces."""
+    tok = _CTX.set((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def resolve(rules: dict, axes: tuple) -> PartitionSpec:
+    """Logical axes tuple -> PartitionSpec, dropping mesh-axis reuse."""
+    used: set[str] = set()
+    out = []
+    for ax in axes:
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a not in used)
+        used.update(ms)
+        out.append(ms if len(ms) > 1 else (ms[0] if ms else None))
+    return PartitionSpec(*out)
+
+
+def fit_spec_to_shape(spec: PartitionSpec, shape: tuple, mesh: Mesh) -> PartitionSpec:
+    """Drop mesh axes that do not evenly divide the corresponding dim."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        ms = () if entry is None else ((entry,) if isinstance(entry, str) else tuple(entry))
+        kept, prod = [], 1
+        for a in ms:
+            k = sizes.get(a, 1)
+            if dim % (prod * k) == 0:
+                kept.append(a)
+                prod *= k
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return PartitionSpec(*out)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} vs axes {axes}")
+    spec = fit_spec_to_shape(resolve(rules, tuple(axes)), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def active_mesh() -> Optional[Mesh]:
+    ctx = _CTX.get()
+    return ctx[0] if ctx else None

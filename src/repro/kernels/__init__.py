@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  flash_attn/        baseline dense flash attention (train/prefill)
+  decomposed_attn/   T1: fused two-stage (Q W_K^T) X^T decode attention —
+                     the sub-matrix pipeline realized as one VMEM-resident
+                     streaming kernel over the X cache
+  cpq_dequant_attn/  T2: decode attention directly over int8 CPQ codes with
+                     in-register HQE dequantization (HBM moves only codes)
+  topk_retrieval/    T3: int8 proxy-similarity scoring (the CAM analogue)
+
+Each directory: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+interpret-mode switch), ref.py (pure-jnp oracle). Kernels TARGET TPU v5e
+(128-aligned MXU tiles, VMEM-resident accumulators) and are VALIDATED with
+interpret=True on CPU.
+"""
+INTERPRET = True  # this container is CPU-only; flipped off on real TPUs

@@ -1,0 +1,1 @@
+from repro.kernels.cpq_dequant_attn.ops import cpq_decode_tpu  # noqa: F401

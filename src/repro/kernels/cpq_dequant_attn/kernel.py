@@ -1,0 +1,133 @@
+"""T2 — decode attention directly over CPQ int8 codes (paper §IV), Pallas TPU.
+
+The hardware DQU (dequantization unit) analogue: HBM moves only the int8/int4
+codes + per-(level, channel) scale/zero + per-token HQE level; dequantization
+happens in VMEM/registers inside the attention kernel, so the cache traffic
+is the compressed bytes (4-8x less than bf16 K/V).
+
+HQE level lookup is MXU-friendly: the per-token level id becomes a one-hot
+(bn, L) matrix multiplied against the (L, D) scale/zero tables — no gathers.
+Pruned elements (stored code 0, i.e. int8 -128) dequantize to exactly 0,
+which realizes the paper's "transfer only non-zero" semantics as
+zero-contribution MACs.
+
+Grid: (B, KV, nn) — nn innermost; online softmax in VMEM scratch; one sweep
+dequantizes K and V blocks and runs both attention matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dequant(codes, lv_oh, scale_ref, zero_ref):
+    """codes: (bn, D) i8 (stored = code - 128); lv_oh: (bn, L) f32."""
+    s = jax.lax.dot_general(lv_oh, scale_ref[0, :, 0, :],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bn, D)
+    z = jax.lax.dot_general(lv_oh, zero_ref[0, :, 0, :],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    c = codes.astype(jnp.float32) + 128.0
+    return jnp.where(c == 0.0, 0.0, (c - 1.0) * s + z)
+
+
+def _kernel(len_ref, q_ref, ck_ref, cv_ref, sk_ref, zk_ref, sv_ref, zv_ref,
+            lvk_ref, lvv_ref, o_ref, m_sc, l_sc, acc_sc, *, scale: float,
+            block_n: int, nn: int, num_levels: int):
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0, 0]                                  # (G, Dh)
+    ck = ck_ref[0, :, 0, :]                          # (bn, Dh) i8
+    cv = cv_ref[0, :, 0, :]                          # (bn, Dv) i8
+
+    def onehot(lv):                                  # (bn,) i32 -> (bn, L) f32
+        return (lv[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (lv.shape[0], num_levels), 1)).astype(jnp.float32)
+
+    lvk_oh = onehot(lvk_ref[0, :, 0])
+    lvv_oh = onehot(lvv_ref[0, :, 0])
+
+    k_hat = _dequant(ck, lvk_oh, sk_ref, zk_ref)     # (bn, Dh) f32
+    s = jax.lax.dot_general(q.astype(jnp.float32), k_hat,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, bn)
+    pos = ib * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_sc[...] = m_new
+    v_hat = _dequant(cv, lvv_oh, sv_ref, zv_ref)     # (bn, Dv) f32
+    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+        p, v_hat, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ib == nn - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def cpq_decode_fwd(q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
+                   level_k, level_v, length, *, scale: float,
+                   block_n: int = 512, interpret: bool = True):
+    """q: (B, KV, G, Dh); codes_*: (B, N, KV, D*) i8; scale_/zero_*:
+    (B, L, KV, D*) f32; level_*: (B, N, KV) i32; length: () int32.
+    Returns (B, KV, G, Dv)."""
+    B, KV, G, Dh = q.shape
+    N = codes_k.shape[1]
+    Dv = codes_v.shape[-1]
+    L = scale_k.shape[1]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        codes_k = jnp.pad(codes_k, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                          constant_values=-128)
+        codes_v = jnp.pad(codes_v, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                          constant_values=-128)
+        level_k = jnp.pad(level_k, ((0, 0), (0, pad), (0, 0)))
+        level_v = jnp.pad(level_v, ((0, 0), (0, pad), (0, 0)))
+    nn = (N + pad) // bn
+
+    kern = functools.partial(_kernel, scale=scale, block_n=bn, nn=nn,
+                             num_levels=L)
+    return pl.pallas_call(
+        kern,
+        grid=(B, KV, nn),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, Dh), lambda b, kv, ib: (b, kv, 0, 0)),
+            pl.BlockSpec((1, bn, 1, Dh), lambda b, kv, ib: (b, ib, kv, 0)),
+            pl.BlockSpec((1, bn, 1, Dv), lambda b, kv, ib: (b, ib, kv, 0)),
+            pl.BlockSpec((1, L, 1, Dh), lambda b, kv, ib: (b, 0, kv, 0)),
+            pl.BlockSpec((1, L, 1, Dh), lambda b, kv, ib: (b, 0, kv, 0)),
+            pl.BlockSpec((1, L, 1, Dv), lambda b, kv, ib: (b, 0, kv, 0)),
+            pl.BlockSpec((1, L, 1, Dv), lambda b, kv, ib: (b, 0, kv, 0)),
+            pl.BlockSpec((1, bn, 1), lambda b, kv, ib: (b, ib, kv)),
+            pl.BlockSpec((1, bn, 1), lambda b, kv, ib: (b, ib, kv)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dv), lambda b, kv, ib: (b, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Dv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.reshape(1).astype(jnp.int32), q, codes_k, codes_v,
+      scale_k, zero_k, scale_v, zero_v,
+      level_k.astype(jnp.int32), level_v.astype(jnp.int32))

@@ -1,0 +1,29 @@
+"""Public op: decode attention over a CPQKVCache via the fused dequant kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as K
+from repro.core.kv_cache import CPQKVCache
+from repro.kernels.cpq_dequant_attn.kernel import cpq_decode_fwd
+
+
+@partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
+def cpq_decode_tpu(q, cache: CPQKVCache, scale: float, block_n: int = 512,
+                   interpret: bool | None = None):
+    """q: (B, 1, H, Dh) roped query; cache: CPQKVCache. -> (B, 1, H, Dv)."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    B, _, H, Dh = q.shape
+    KV = cache.k.codes.shape[2]
+    g = H // KV
+    qg = q[:, 0].reshape(B, KV, g, Dh)
+    out = cpq_decode_fwd(
+        qg, cache.k.codes, cache.v.codes,
+        cache.k.scale, cache.k.zero, cache.v.scale, cache.v.zero,
+        cache.k.level, cache.v.level, cache.length, scale=scale,
+        block_n=block_n, interpret=interpret)
+    return out.reshape(B, 1, H, -1).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle: dequantize the whole CPQ arena, run dense attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _dequant_full(codes, scale, zero, level):
+    """codes: (B,N,KV,D) i8; scale/zero: (B,L,KV,D); level: (B,N,KV)."""
+    lvl = level[..., None]
+    s = jnp.take_along_axis(scale, jnp.broadcast_to(lvl, codes.shape), axis=1)
+    z = jnp.take_along_axis(zero, jnp.broadcast_to(lvl, codes.shape), axis=1)
+    c = codes.astype(jnp.float32) + 128.0
+    return jnp.where(c == 0.0, 0.0, (c - 1.0) * s + z)
+
+
+def cpq_decode_ref(q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
+                   level_k, level_v, length, scale):
+    """q: (B, KV, G, Dh) -> (B, KV, G, Dv) f32."""
+    k_hat = _dequant_full(codes_k, scale_k, zero_k, level_k)
+    v_hat = _dequant_full(codes_v, scale_v, zero_v, level_v)
+    s = jnp.einsum("bkgd,bnkd->bkgn", q.astype(jnp.float32), k_hat) * scale
+    pos = jnp.arange(codes_k.shape[1], dtype=jnp.int32)
+    s = jnp.where((pos < length)[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgn,bnkd->bkgd", w, v_hat)

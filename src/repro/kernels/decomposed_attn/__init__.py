@@ -1,0 +1,1 @@
+from repro.kernels.decomposed_attn.ops import decomposed_decode_tpu  # noqa: F401

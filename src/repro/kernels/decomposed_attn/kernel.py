@@ -1,0 +1,114 @@
+"""T1 — fused decomposed-attention decode kernel (paper §III), Pallas TPU.
+
+Computes, for one new-token query against the X cache:
+
+    s_b   = R X_b^T (+ q_rope k_rope_b^T)     (score stage,  MXU)
+    P    += softmax-online(s_b) X_b           (value stage,  MXU)
+
+per X block b — i.e. BOTH cascaded MatMuls of the paper's decomposition
+stream through VMEM on one X read. This is the sub-matrix pipeline of
+Fig. 3(b) realized as a single kernel: stage 2 consumes stage-1 tiles as
+they are produced, and neither the scores nor P round-trip HBM.
+
+R = q_nope W_K^T is computed outside (a (H, Dn) x (Dn, Dm) matmul, tiny for
+one token), as is the final out = P W_V. The kernel owns the O(N) part.
+
+Grid: (B, nn) — nn innermost; online-softmax state (m, l, P) in VMEM scratch.
+The rope path covers the shared-rope layout (MLA: one k_rope per token).
+``length`` arrives via scalar prefetch (SMEM) and masks unwritten slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, r_ref, qr_ref, x_ref, kr_ref, p_ref,
+            m_sc, l_sc, acc_sc, *, scale: float, block_n: int, nn: int,
+            rope_dims: int):
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    r = r_ref[0]                    # (H, Dm)
+    x = x_ref[0]                    # (bn, Dm)
+    # --- score stage: s = R X^T (the first cascaded MatMul)
+    s = jax.lax.dot_general(r, x, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (H, bn)
+    if rope_dims > 0:
+        qr = qr_ref[0]              # (H, Rr)
+        kr = kr_ref[0]              # (bn, Rr)
+        s = s + jax.lax.dot_general(qr, kr, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+    s = s * scale
+    pos = ib * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)          # (H, bn)
+    l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    m_sc[...] = m_new
+    # --- value stage: P += p X (the second cascaded MatMul, same X tile)
+    acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+        p.astype(x.dtype), x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ib == nn - 1)
+    def _finish():
+        p_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(p_ref.dtype)
+
+
+def decomposed_decode_fwd(r: jax.Array, q_rope: jax.Array, x: jax.Array,
+                          k_rope: jax.Array, length: jax.Array, *,
+                          scale: float, block_n: int = 512,
+                          interpret: bool = True) -> jax.Array:
+    """r: (B, H, Dm); q_rope: (B, H, Rr); x: (B, N, Dm); k_rope: (B, N, Rr);
+    length: () int32. Returns P: (B, H, Dm) — caller applies W_V."""
+    B, H, Dm = r.shape
+    N = x.shape[1]
+    Rr = q_rope.shape[-1]
+    bn = min(block_n, N)
+    pad = (-N) % bn
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    nn = (N + pad) // bn
+
+    grid = (B, nn)
+    kern = functools.partial(_kernel, scale=scale, block_n=bn, nn=nn,
+                             rope_dims=Rr)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # length (1,)
+            pl.BlockSpec((1, H, Dm), lambda b, ib: (b, 0, 0)),
+            pl.BlockSpec((1, H, max(Rr, 1)), lambda b, ib: (b, 0, 0)),
+            pl.BlockSpec((1, bn, Dm), lambda b, ib: (b, ib, 0)),
+            pl.BlockSpec((1, bn, max(Rr, 1)), lambda b, ib: (b, ib, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dm), lambda b, ib: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dm), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, Dm), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length.reshape(1).astype(jnp.int32),
+      r,
+      q_rope if Rr else jnp.zeros((B, H, 1), r.dtype),
+      x,
+      k_rope if Rr else jnp.zeros((B, N + pad, 1), x.dtype))

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the decomposed-attention decode kernel: the P-stage of
+core.decomposed_attention (shared-rope layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decomposed_decode_ref(r, q_rope, x, k_rope, length, scale):
+    """r: (B,H,Dm); q_rope: (B,H,Rr); x: (B,N,Dm); k_rope: (B,N,Rr);
+    -> P: (B, H, Dm)."""
+    s = jnp.einsum("bhm,bnm->bhn", r, x).astype(jnp.float32)
+    if q_rope.shape[-1] > 0:
+        s = s + jnp.einsum("bhr,bnr->bhn", q_rope, k_rope).astype(jnp.float32)
+    s = s * scale
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    s = jnp.where((pos < length)[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhn,bnm->bhm", w.astype(x.dtype), x)

@@ -1,0 +1,114 @@
+"""Flash attention forward, Pallas TPU.
+
+Grid: (B, H, nq, nk) — nk is the innermost (sequential on-core) axis, so the
+online-softmax state for one (b, h, iq) lives in VMEM scratch across the nk
+sweep; the (T x S) score matrix never exists. Tiles are MXU-aligned
+(block_q x head_dim and block_k x head_dim, head_dim a multiple of 128 on the
+lane axis is ideal; 64 also maps cleanly on v5e).
+
+Causal blocks that are fully masked are skipped with pl.when (no MXU work).
+GQA: the kv-head index for query head h is h // (H // KV), computed in the
+BlockSpec index_map so K/V tiles are fetched per kv head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            nk: int, seq_k: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # skip fully-masked causal blocks (first row of q tile vs last k row)
+    live = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :]                      # (bq, D)
+        k = k_ref[0, :, 0, :]                      # (bk, D)
+        v = v_ref[0, :, 0, :]                      # (bk, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_k
+        if causal:
+            qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            mask = mask & (kpos <= qpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        scale: float, causal: bool = True,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """q: (B, T, H, D), k/v: (B, S, KV, D/Dv) -> (B, T, H, Dv)."""
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    g = H // KV
+    bq = min(block_q, T)
+    bk = min(block_k, S)
+    pad_q = (-T) % bq
+    pad_k = (-S) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = (T + pad_q) // bq
+    nk = (S + pad_k) // bk
+
+    grid = (B, H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, block_q=bq,
+                          block_k=bk, nk=nk, seq_k=S),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, bk, 1, D), lambda b, h, iq, ik: (b, ik, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, Dv), lambda b, h, iq, ik: (b, ik, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, Dv), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T + pad_q, H, Dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, Dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :T]

@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the flash attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro import kernels as K
+from repro.kernels.flash_attn.kernel import flash_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention_tpu(q, k, v, scale: float, causal: bool = True,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool | None = None):
+    if interpret is None:
+        interpret = K.INTERPRET
+    return flash_attention_fwd(q, k, v, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, scale: float,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, T, H, D); k/v: (B, S, KV, D) -> (B, T, H, Dv). Exact SDA."""
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, T, KV, g, D)
+    s = jnp.einsum("btkgd,bskd->btkgs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        pos_q = jnp.arange(T)[:, None]
+        pos_k = jnp.arange(S)[None, :]
+        s = jnp.where((pos_k <= pos_q)[None, :, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("btkgs,bskd->btkgd", w.astype(v.dtype), v)
+    return o.reshape(B, T, H, v.shape[-1])

@@ -1,0 +1,1 @@
+from repro.kernels.topk_retrieval.ops import proxy_scores_tpu, retrieval_decode_tpu  # noqa: F401

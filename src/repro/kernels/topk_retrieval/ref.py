@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the proxy-scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def proxy_scores_ref(qs, qz, codes, length):
+    """qs: (B,KV,G,Dp); qz: (B,KV,G,1); codes: (B,N,KV,Dp) i8 -> (B,KV,G,N)."""
+    c = codes.astype(jnp.float32) + 128.0
+    s = jnp.einsum("bkgd,bnkd->bkgn", qs, c) + qz
+    pos = jnp.arange(codes.shape[1], dtype=jnp.int32)
+    return jnp.where((pos < length)[None, None, None, :], s, NEG_INF)

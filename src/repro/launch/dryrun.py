@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+# ruff: noqa: E402  (the XLA flag MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost/collective analysis for the roofline.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch musicgen-large --shape decode_32k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 40-cell baseline
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Outputs one JSON per cell under experiments/dryrun/.
+"""
+import argparse
+import json
+import math
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, cell_supported, get_config
+from repro.distributed.cache_specs import cache_pspecs
+from repro.distributed.rules import act_rules, param_rules
+from repro.distributed.sharding import sharding_context
+from repro.distributed import hlo_analysis
+from repro.launch import input_specs as ispec
+from repro.launch.mesh import make_production_mesh, mesh_shape_dict
+from repro.models import model as M
+from repro.optim import adafactor, adamw, cosine_schedule
+from repro.train.step import TrainStepCfg, make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def pick_optimizer(cfg):
+    """adafactor for models whose f32 adam moments would not fit 16GB/chip."""
+    from repro.common.param import count_params
+    n = count_params(M.model_defs(cfg))
+    return ("adafactor", adafactor(cosine_schedule(1e-4, 100, 10000))) if n > 5e10 \
+        else ("adamw", adamw(cosine_schedule(3e-4, 100, 10000)))
+
+
+def suggest_microbatches(cfg, shape, mesh) -> int:
+    """Keep the per-device scan-carry activation footprint under ~2GB."""
+    ms = mesh_shape_dict(mesh)
+    dp = ms.get("data", 1) * ms.get("pod", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    carry = b_loc * shape.seq_len * cfg.d_model * 2 * max(cfg.num_blocks, 1)
+    target = 2.0e9
+    k = 1
+    while carry / k > target and k < b_loc:
+        k *= 2
+    while shape.global_batch % (k * dp) and k > 1:
+        k //= 2
+    return k
+
+
+def named(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, mode: str | None = None):
+    """Returns (lowered, meta). mode overrides the attention runtime."""
+    cfg = get_config(arch)
+    if mode and mode != "dense":
+        cfg = cfg.with_attention(mode)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    arules = act_rules(multi_pod)
+    prules = param_rules(multi_pod)
+    pspecs = M.param_specs(cfg, prules, mesh_shape_dict(mesh))
+    abstract = M.abstract_params(cfg)
+    meta = {
+        "arch": arch, "shape": shape_name, "mode": mode or cfg.attention.mode,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "devices": int(math.prod(mesh.devices.shape)),
+        "kind": shape.kind,
+    }
+
+    with sharding_context(mesh, arules):
+        if shape.kind == "train":
+            opt_name, opt = pick_optimizer(cfg)
+            mb = suggest_microbatches(cfg, shape, mesh)
+            meta.update(optimizer=opt_name, microbatches=mb)
+            tstep = make_train_step(cfg, opt, TrainStepCfg(microbatches=mb))
+            batch, bspecs = ispec.train_inputs(cfg, shape, mesh)
+            ospecs = opt.state_specs(pspecs, abstract)
+            ostate = jax.eval_shape(opt.state_like, abstract)
+            mspec = {"nll": P(), "aux": P(), "loss": P()}
+            fn = jax.jit(
+                tstep,
+                in_shardings=(named(mesh, pspecs), named(mesh, ospecs), None,
+                              named(mesh, bspecs)),
+                out_shardings=(named(mesh, pspecs), named(mesh, ospecs),
+                               named(mesh, mspec)),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(abstract, ostate, jax.ShapeDtypeStruct((), jnp.int32),
+                               batch)
+        elif shape.kind == "prefill":
+            rt = cfg.attention
+            batch, bspecs, caches, cspecs = ispec.prefill_inputs(cfg, rt, shape, mesh)
+            lspec = P(bspecs[next(iter(bspecs))][0], "model")
+
+            def prefill_fn(params, batch, caches):
+                return M.prefill(cfg, rt, params, batch, caches)
+
+            fn = jax.jit(
+                prefill_fn,
+                in_shardings=(named(mesh, pspecs), named(mesh, bspecs),
+                              named(mesh, cspecs)),
+                out_shardings=(named(mesh, lspec), named(mesh, cspecs)),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(abstract, batch, caches)
+        else:  # decode
+            rt = cfg.attention
+            tokens, tspec, pos, caches, cspecs = ispec.decode_inputs(cfg, rt, shape, mesh)
+            lspec = P(tspec[0], "model")
+
+            def serve_step(params, tokens, pos, caches):
+                return M.decode_step(cfg, rt, params, tokens, pos, caches)
+
+            fn = jax.jit(
+                serve_step,
+                in_shardings=(named(mesh, pspecs), named(mesh, tspec), None,
+                              named(mesh, cspecs)),
+                out_shardings=(named(mesh, lspec), named(mesh, cspecs)),
+                donate_argnums=(3,),
+            )
+            lowered = fn.lower(abstract, tokens, pos, caches)
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: str | None = None,
+             out_dir: Path = OUT_DIR, save: bool = True) -> dict:
+    cfg = get_config(arch)
+    if mode and mode != "dense":
+        cfg = cfg.with_attention(mode)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    tag = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}__{mode or cfg.attention.mode}"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "skipped": True, "why": why,
+               "mesh": "pod2x16x16" if multi_pod else "16x16"}
+        print(f"[dryrun] SKIP {tag}: {why}")
+    else:
+        t0 = time.time()
+        lowered, meta = lower_cell(arch, shape_name, multi_pod, mode)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            }
+        except Exception as e:  # pragma: no cover
+            mem_d = {"error": str(e)}
+        hlo = compiled.as_text()
+        # trip-count-aware per-device analysis (XLA's cost_analysis counts
+        # while bodies once — see hlo_analysis docstring)
+        cost_hlo = hlo_analysis.analyze(hlo)
+        rec = dict(
+            meta,
+            skipped=False,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=cost_hlo.flops,
+            bytes_per_device=cost_hlo.bytes,
+            collective_bytes_per_device=cost_hlo.collectives,
+            collective_total=cost_hlo.collective_total,
+            xla_flops_unscaled=cost.get("flops"),
+            memory=mem_d,
+            trip_counts=sorted(set(hlo_analysis.while_trip_counts(hlo)))[-8:],
+        )
+        print(f"[dryrun] OK   {tag}: compile={t_compile:.1f}s "
+              f"flops/dev={rec['flops_per_device']:.3e} "
+              f"bytes/dev={rec['bytes_per_device']:.3e} "
+              f"coll/dev={rec['collective_total']:.3e}B "
+              f"temp={mem_d.get('temp_bytes')}")
+    if save:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--mode", default=None,
+                    choices=[None, "dense", "decomposed", "cpq", "retrieval", "decomposed_cpq"])
+    ap.add_argument("--all", action="store_true", help="all 40 assigned cells")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            mode = args.mode
+            cfg = get_config(arch)
+            if (args.all and shape_name == "long_500k"
+                    and not cfg.sub_quadratic and mode is None):
+                # paper's T3 makes the full-attention long-context cell runnable
+                mode = "retrieval"
+            if args.skip_existing:
+                cfg2 = get_config(arch)
+                if mode and mode != "dense":
+                    cfg2 = cfg2.with_attention(mode)
+                tag = (f"{arch}__{shape_name}__{'pod2' if mp else 'pod1'}"
+                       f"__{mode or cfg2.attention.mode}")
+                if (out / f"{tag}.json").exists():
+                    continue
+            try:
+                run_cell(arch, shape_name, mp, mode, out)
+            except Exception as e:
+                failures.append((arch, shape_name, mp, str(e)[:200]))
+                print(f"[dryrun] FAIL {arch}/{shape_name}/mp={mp}: {e}")
+    if failures:
+        raise SystemExit(f"{len(failures)} dryrun failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every model input, per
+(arch x shape x mesh). No device allocation — the dry-run lowers against
+these directly (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import AttentionRuntime, ModelConfig, ShapeCfg
+from repro.distributed.cache_specs import cache_pspecs
+from repro.distributed.rules import batch_axes
+from repro.distributed.sharding import fit_spec_to_shape
+from repro.models import model as M
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _fit(specs, abstract, mesh):
+    """Drop spec axes that don't divide the concrete dims (e.g. 4 heads / 16)."""
+    return jax.tree.map(
+        lambda s, a: fit_spec_to_shape(s, a.shape, mesh), specs, abstract,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_ax(shape: ShapeCfg, mesh) -> tuple:
+    ms = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return batch_axes("pod" in mesh.axis_names, shape.global_batch, ms)
+
+
+def _seq_ax(shape: ShapeCfg, mesh, b_ax: tuple) -> tuple:
+    """Token-arena sharding for decode caches: use the axes the batch left
+    free (long-context batch=1 shards the sequence instead)."""
+    if shape.kind != "decode":
+        return ()
+    free = tuple(a for a in ("data",) if a not in b_ax)
+    return free
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeCfg, mesh):
+    """-> (SDS tree, PartitionSpec tree) for the train batch."""
+    B, S = shape.global_batch, shape.seq_len
+    b = _batch_ax(shape, mesh)
+    bspec = P(b if len(b) > 1 else (b[0] if b else None))
+    batch = {"labels": SDS((B, S), jnp.int32)}
+    specs = {"labels": bspec}
+    if cfg.input_kind == "audio_frames":
+        batch["frames"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+        specs["frames"] = P(bspec[0], None, None)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+        specs["tokens"] = bspec
+    if cfg.input_kind == "text+patches":
+        batch["patches"] = SDS((B, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+        specs["patches"] = P(bspec[0], None, None)
+    return batch, specs
+
+
+def prefill_inputs(cfg: ModelConfig, rt: AttentionRuntime, shape: ShapeCfg, mesh):
+    """-> (batch SDS, batch specs, caches SDS, cache specs)."""
+    B, S = shape.global_batch, shape.seq_len
+    batch, specs = train_inputs(cfg, shape, mesh)
+    del batch["labels"], specs["labels"]
+    b = _batch_ax(shape, mesh)
+    s = _seq_ax(shape, mesh, b)
+    caches = jax.eval_shape(partial(M.init_caches, cfg, rt, B, S))
+    cspecs = _fit(cache_pspecs(cfg, rt, b if b else None, s if s else None),
+                  caches, mesh)
+    return batch, specs, caches, cspecs
+
+
+def decode_inputs(cfg: ModelConfig, rt: AttentionRuntime, shape: ShapeCfg, mesh):
+    """-> (tokens SDS, tokens spec, pos SDS, caches SDS, cache specs).
+
+    decode_* shapes lower ``serve_step``: one new token against a cache of
+    seq_len tokens (arena seq_len + headroom)."""
+    B, N = shape.global_batch, shape.seq_len
+    b = _batch_ax(shape, mesh)
+    s = _seq_ax(shape, mesh, b)
+    tokens = SDS((B, 1), jnp.int32)
+    tspec = P(b if len(b) > 1 else (b[0] if b else None), None)
+    pos = SDS((), jnp.int32)
+    caches = jax.eval_shape(partial(M.init_caches, cfg, rt, B, N))
+    cspecs = _fit(cache_pspecs(cfg, rt, b if b else None, s if s else None),
+                  caches, mesh)
+    return tokens, tspec, pos, caches, cspecs

@@ -1,0 +1,12 @@
+from repro.models import model  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    abstract_params,
+    decode_step,
+    forward_train,
+    init_caches,
+    init_params,
+    loss_fn,
+    model_defs,
+    param_specs,
+    prefill,
+)

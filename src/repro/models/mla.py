@@ -1,0 +1,156 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — implemented as an instance of
+the paper's T1 matrix decomposition.
+
+MLA caches a learned 512-d latent ``c_kv = Norm(X W_DKV)`` (plus one shared
+64-d roped key) instead of per-head K/V. Decode uses the ABSORBED form:
+
+    score_h = (q_nope_h W_UK_h^T) c^T + q_rope k_rope^T
+    out_h   = (S c) W_UV_h
+
+which is literally ``(Q W_K^T) X^T`` / ``(S X) W_V`` with X replaced by the
+learned latent — i.e. the paper's decomposition with a compressed operand.
+Both stages reuse one cached c read; the roped slice is the decoupled cache.
+We therefore route MLA decode through ``core.decomposed_attention`` and reuse
+the XCache container (x := c_kv, KV_r := 1 shared rope head).
+
+Modes: "decomposed" (native, default for MLA regardless of the global mode)
+and "cpq" (T2 on the latent cache via CPQXCache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+from repro.configs.base import AttentionRuntime, ModelConfig
+from repro.core import attention as core_attn
+from repro.core import cpq as cpq_lib
+from repro.core import kv_cache as kvc
+from repro.core.decomposed_attention import decomposed_attention
+from repro.core.flash_ref import attention_auto
+from repro.distributed.sharding import constrain
+from repro.models.layers import apply_rope, rope_tables
+
+
+def _dims(cfg: ModelConfig):
+    m = cfg.mla
+    return m.kv_lora_rank, m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+
+def mla_defs(cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.num_heads
+    L, Dn, Dr, Dv = _dims(cfg)
+    dt = cfg.param_dtype
+    return {
+        "wq": ParamDef((d, H * (Dn + Dr)), dt, ("embed", "heads"), init="fan_in"),
+        "wdkv": ParamDef((d, L + Dr), dt, ("embed", None), init="fan_in"),
+        "kv_norm": ParamDef((L,), jnp.float32, (None,), init="ones"),
+        "wuk": ParamDef((L, H, Dn), dt, (None, "heads", None), init="fan_in"),
+        "wuv": ParamDef((L, H, Dv), dt, (None, "heads", None), init="fan_in"),
+        "wo": ParamDef((H * Dv, d), dt, ("heads", "embed"), init="fan_in"),
+    }
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps) * scale).astype(x.dtype)
+
+
+def _q_ckv(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array):
+    """Shared projection work: roped q (nope+rope split) and the latent."""
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    L, Dn, Dr, Dv = _dims(cfg)
+    q = (x @ p["wq"]).reshape(B, T, H, Dn + Dr)
+    q = constrain(q, "act_batch", None, "act_heads", None)
+    q_nope, q_rope = q[..., :Dn], q[..., Dn:]
+    kv = x @ p["wdkv"]
+    c = _rms(kv[..., :L], p["kv_norm"])
+    k_rope = kv[..., None, L:]  # (B, T, 1, Dr) shared across heads
+    cos, sin = rope_tables(positions, Dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    return q_nope, q_rope, c, k_rope
+
+
+def _scale(cfg: ModelConfig) -> float:
+    _, Dn, Dr, _ = _dims(cfg)
+    return (Dn + Dr) ** -0.5
+
+
+def _out(cfg: ModelConfig, p, o: jax.Array) -> jax.Array:
+    B, T = o.shape[:2]
+    y = o.reshape(B, T, -1) @ p["wo"]
+    return constrain(y, "act_batch", None, None)
+
+
+# -------------------------------------------------------------------- train
+
+
+def mla_train(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Naive (non-absorbed) path: materialize per-head K/V — best for large-T
+    prefill/train where the N*H*Dn score math beats the absorbed extra FLOPs."""
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, c, k_rope = _q_ckv(cfg, p, x, positions)
+    k_nope = jnp.einsum("btl,lhd->bthd", c, p["wuk"])
+    v = jnp.einsum("btl,lhd->bthd", c, p["wuv"])
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (*k_rope.shape[:2], H, k_rope.shape[-1]))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = attention_auto(q, k, v, _scale(cfg), causal=True)
+    return _out(cfg, p, o)
+
+
+# ------------------------------------------------------------------ serving
+
+
+def init_mla_cache(cfg: ModelConfig, rt: AttentionRuntime, batch: int, n_max: int):
+    L, _, Dr, _ = _dims(cfg)
+    if rt.mode == "cpq":
+        return kvc.init_cpq_x(batch, n_max, L, 1, Dr, rt.cpq, cfg.param_dtype)
+    return kvc.init_x(batch, n_max, L, 1, Dr, cfg.param_dtype)
+
+
+def mla_prefill(cfg: ModelConfig, rt: AttentionRuntime, p, x: jax.Array,
+                positions: jax.Array, cache):
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, c, k_rope = _q_ckv(cfg, p, x, positions)
+    k_nope = jnp.einsum("btl,lhd->bthd", c, p["wuk"])
+    v = jnp.einsum("btl,lhd->bthd", c, p["wuv"])
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_rope.shape[:2], H, k_rope.shape[-1]))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = attention_auto(q, k, v, _scale(cfg), causal=True)
+
+    length = jnp.asarray(T, jnp.int32)
+    if isinstance(cache, kvc.CPQXCache):
+        xt = cpq_lib.cpq_compress_prefill(c[:, :, None, :], rt.cpq, cache.x.n_max)
+        cache = kvc.CPQXCache(xt, kvc.append_tokens(cache.k_rope, k_rope, 0), length)
+    else:
+        cache = kvc.XCache(kvc.append_tokens(cache.x, c, 0),
+                           kvc.append_tokens(cache.k_rope, k_rope, 0), length)
+    return _out(cfg, p, o), cache
+
+
+def mla_decode(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
+               pos: jax.Array, cache):
+    """Absorbed decode — the paper's decomposition over the latent cache."""
+    q_nope, q_rope, c_t, k_rope_t = _q_ckv(cfg, p, x_t, pos[None])
+    slot = cache.length
+    new_len = cache.length + 1
+
+    if isinstance(cache, kvc.CPQXCache):
+        xt = cpq_lib.cpq_append_decode(cache.x, c_t[:, :, None, :], slot, rt.cpq)
+        cache = kvc.CPQXCache(xt, kvc.append_tokens(cache.k_rope, k_rope_t, slot), new_len)
+        c_arena = cpq_lib.cpq_dequant(xt, x_t.dtype)[:, :, 0, :]  # fused in kernel path
+    else:
+        cache = kvc.XCache(kvc.append_tokens(cache.x, c_t, slot),
+                           kvc.append_tokens(cache.k_rope, k_rope_t, slot), new_len)
+        c_arena = cache.x
+
+    o = decomposed_attention(
+        q_nope, q_rope, c_arena, cache.k_rope,
+        w_k_nope=p["wuk"], w_v=p["wuv"], length=new_len, scale=_scale(cfg))
+    return _out(cfg, p, o), cache

@@ -1,0 +1,187 @@
+"""Full model: embed -> prefix layers (unrolled) -> scanned blocks -> norm ->
+LM head. Three entry points: forward_train / prefill / decode_step.
+
+All functions are pure; parameters/caches are pytrees declared by
+``model_defs`` (see common/param.py for how init, ShapeDtypeStructs and
+PartitionSpecs all derive from the same tree).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import abstract_tree, init_tree, spec_tree
+from repro.configs.base import AttentionRuntime, ModelConfig
+from repro.models import transformer as tfm
+from repro.models.layers import embed_defs, embed_inputs, lm_logits, norm_defs, apply_norm
+
+
+# --------------------------------------------------------------------- defs
+
+
+def model_defs(cfg: ModelConfig):
+    return {
+        "embed": embed_defs(cfg),
+        "prefix": [tfm.layer_defs(cfg, m, f) for m, f in cfg.prefix_pattern],
+        "blocks": tfm.stacked_block_defs(cfg),
+        "final_norm": norm_defs(cfg),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return init_tree(model_defs(cfg), key)
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(model_defs(cfg))
+
+
+def param_specs(cfg: ModelConfig, rules: dict, mesh_shape: dict | None = None):
+    return spec_tree(model_defs(cfg), rules, mesh_shape)
+
+
+def _patches(cfg: ModelConfig, params, batch: dict) -> Optional[jax.Array]:
+    if cfg.input_kind != "text+patches":
+        return None
+    return batch["patches"].astype(cfg.param_dtype) @ params["embed"]["mm_proj"]
+
+
+# -------------------------------------------------------------------- train
+
+
+def forward_train(cfg: ModelConfig, params, batch: dict, remat: bool = True):
+    """-> (logits (B,S,V) f32, aux_loss scalar)."""
+    S = (batch["tokens"] if "tokens" in batch else batch["frames"]).shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_inputs(cfg, params["embed"], batch, positions)
+    patches = _patches(cfg, params, batch)
+    aux = jnp.zeros((), jnp.float32)
+
+    for kind, p in zip(cfg.prefix_pattern, params["prefix"]):
+        x, a = tfm.layer_train(cfg, kind, p, x, positions, patches)
+        aux = aux + a
+
+    if cfg.num_blocks:
+        def one_layer(kind):
+            def f(x, p):
+                return tfm.layer_train(cfg, kind, p, x, positions, patches)
+            # inner remat: backward recomputes one sublayer at a time
+            return jax.checkpoint(f) if remat and len(cfg.block_pattern) > 1 else f
+
+        layer_fns = [one_layer(k) for k in cfg.block_pattern]
+
+        def body(x, block_params):
+            # pin the sliced block weights inside the loop: without this, the
+            # SPMD partitioner all-gathers the WHOLE stacked (num_blocks, ...)
+            # FSDP weights and LICM hoists them out of the scan (measured
+            # +43GB/device on jamba train — EXPERIMENTS.md §Perf)
+            block_params = jax.lax.optimization_barrier(block_params)
+            a_blk = jnp.zeros((), jnp.float32)
+            for f, p in zip(layer_fns, block_params):
+                x, a = f(x, p)
+                a_blk = a_blk + a
+            return x, a_blk
+
+        if remat:
+            # outer remat: scan saves only the per-block carry
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, auxs = jax.lax.scan(body, x, tuple(params["blocks"]))
+        aux = aux + jnp.sum(auxs)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return lm_logits(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict, remat: bool = True,
+            aux_weight: float = 0.01):
+    """Next-token cross entropy (+ MoE aux). labels: (B,S) int32, -1 = pad."""
+    logits, aux = forward_train(cfg, params, batch, remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    tgt = labels[:, 1:]
+    ok = tgt >= 0
+    nll = -jnp.take_along_axis(logp, jnp.maximum(tgt, 0)[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * ok) / jnp.maximum(jnp.sum(ok), 1)
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+
+
+def init_caches(cfg: ModelConfig, rt: AttentionRuntime, batch: int, n_max: int):
+    """Cache pytree: prefix list + per-position stacked block caches."""
+    npatch = cfg.num_patch_tokens
+    prefix = [tfm.layer_cache_init(cfg, rt, k, batch, n_max, npatch)
+              for k in cfg.prefix_pattern]
+
+    def stacked(kind):
+        one = tfm.layer_cache_init(cfg, rt, kind, batch, n_max, npatch)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_blocks,) + a.shape).copy(), one)
+
+    blocks = [stacked(k) for k in cfg.block_pattern]
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def prefill(cfg: ModelConfig, rt: AttentionRuntime, params, batch: dict, caches):
+    """Process the prompt; returns (last-position logits (B,V), caches)."""
+    S = (batch["tokens"] if "tokens" in batch else batch["frames"]).shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = embed_inputs(cfg, params["embed"], batch, positions)
+    patches = _patches(cfg, params, batch)
+
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c2 = tfm.layer_prefill(cfg, rt, kind, p, x, positions, patches, c)
+        new_prefix.append(c2)
+
+    new_blocks = caches["blocks"]
+    if cfg.num_blocks:
+        def body(x, inp):
+            block_params, block_caches = jax.lax.optimization_barrier(inp)
+            outs = []
+            for kind, p, c in zip(cfg.block_pattern, block_params, block_caches):
+                x, c2 = tfm.layer_prefill(cfg, rt, kind, p, x, positions, patches, c)
+                outs.append(c2)
+            return x, tuple(outs)
+
+        x, new_blocks = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(caches["blocks"])))
+        new_blocks = list(new_blocks)
+
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}
+
+
+def decode_step(cfg: ModelConfig, rt: AttentionRuntime, params, tokens: jax.Array,
+                pos: jax.Array, caches):
+    """One decode step. tokens: (B, 1) int32; pos: () int32 (next position).
+    Returns (logits (B, V), caches)."""
+    x = embed_inputs(cfg, params["embed"], {"tokens": tokens}, pos[None])
+
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c2 = tfm.layer_decode(cfg, rt, kind, p, x, pos, c)
+        new_prefix.append(c2)
+
+    new_blocks = caches["blocks"]
+    if cfg.num_blocks:
+        def body(x, inp):
+            block_params, block_caches = jax.lax.optimization_barrier(inp)
+            outs = []
+            for kind, p, c in zip(cfg.block_pattern, block_params, block_caches):
+                x, c2 = tfm.layer_decode(cfg, rt, kind, p, x, pos, c)
+                outs.append(c2)
+            return x, tuple(outs)
+
+        x, new_blocks = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(caches["blocks"])))
+        new_blocks = list(new_blocks)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: shared + routed experts, top-k routing, fixed
+capacity with sort-based dispatch (memory-optimal: no (S,E,C) one-hot tensor;
+scatters route tokens into per-expert buffers that XLA SPMD shards over the
+``model`` mesh axis => expert parallelism with compiler-inserted all_to_alls).
+
+DeepSeek-style fine-grained MoE: ``num_shared`` always-on experts (fused into
+one dense GLU of width num_shared*d_ff_expert) + ``num_experts`` routed,
+``top_k`` active. Aux load-balance loss (switch-style) returned for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def moe_defs(cfg: ModelConfig):
+    m = cfg.moe
+    d, dt = cfg.d_model, cfg.param_dtype
+    E, F = m.num_experts, m.d_ff_expert
+    p = {
+        "router": ParamDef((d, E), jnp.float32, ("embed", None), init="fan_in"),
+        "w_gate": ParamDef((E, d, F), dt, ("experts", "embed", "expert_mlp"), init="fan_in"),
+        "w_up": ParamDef((E, d, F), dt, ("experts", "embed", "expert_mlp"), init="fan_in"),
+        "w_down": ParamDef((E, F, d), dt, ("experts", "expert_mlp", "embed"), init="fan_in"),
+    }
+    if m.num_shared > 0:
+        FS = m.num_shared * F
+        p["shared"] = {
+            "w_gate": ParamDef((d, FS), dt, ("embed", "mlp"), init="fan_in"),
+            "w_up": ParamDef((d, FS), dt, ("embed", "mlp"), init="fan_in"),
+            "w_down": ParamDef((FS, d), dt, ("mlp", "embed"), init="fan_in"),
+        }
+    return p
+
+
+def _glu(x, wg, wu, wd):
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+GROUP = 1024  # tokens per dispatch group (GShard-style); groups ride the batch sharding
+
+
+def apply_moe(cfg: ModelConfig, p, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out, aux_loss).
+
+    GShard-style grouped one-hot dispatch: tokens are split into groups of
+    GROUP (the group axis inherits the data sharding); capacity
+    C = cf * GROUP * k / E per (group, expert). Dispatch/combine are einsums
+    (no scatter), so XLA SPMD turns the (group-sharded) -> (expert-sharded)
+    boundary into an all_to_all instead of replicating buffers.
+    """
+    m = cfg.moe
+    B, T, D = x.shape
+    S = B * T
+    E, K = m.num_experts, m.top_k
+
+    g = min(GROUP, S)
+    pad = (-S) % g
+    xf = x.reshape(S, D)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    G = xf.shape[0] // g
+    xg = xf.reshape(G, g, D)
+    xg = constrain(xg, "act_batch", None, None)
+    C = max(int(m.capacity_factor * g * K / E), 4)
+    C = min(C, g)
+
+    logits = xg.astype(jnp.float32) @ p["router"]          # (G, g, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                 # (G, g, K)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # switch-style load-balance aux loss
+    oh_all = jax.nn.one_hot(top_e, E, dtype=jnp.float32)   # (G, g, K, E)
+    aux = E * jnp.sum(jnp.mean(jnp.sum(oh_all, 2), axis=(0, 1)) *
+                      jnp.mean(probs, axis=(0, 1))) / K
+
+    # position of each (token, choice) within its expert, FIFO over (g*K)
+    ohf = oh_all.reshape(G, g * K, E)
+    pos = jnp.cumsum(ohf, axis=1) - 1.0                    # (G, g*K, E)
+    pos_choice = jnp.sum(pos * ohf, axis=-1).reshape(G, g, K)
+
+    combine = jnp.zeros((G, g, E, C), jnp.float32)
+    for j in range(K):
+        keep = (pos_choice[:, :, j] < C)
+        w = jnp.where(keep, top_w[:, :, j], 0.0)
+        oh_e = oh_all[:, :, j]                             # (G, g, E)
+        oh_c = jax.nn.one_hot(pos_choice[:, :, j], C, dtype=jnp.float32)
+        combine = combine + (w[..., None] * oh_e)[..., None] * oh_c[:, :, None, :]
+    dispatch = (combine > 0).astype(x.dtype)               # (G, g, E, C)
+
+    ein = jnp.einsum("GgEC,Ggd->GECd", dispatch, xg)
+    ein = constrain(ein, "act_batch", "act_experts", None, None)
+    h = jax.nn.silu(jnp.einsum("GECd,Edf->GECf", ein, p["w_gate"]))
+    h = h * jnp.einsum("GECd,Edf->GECf", ein, p["w_up"])
+    h = constrain(h, "act_batch", "act_experts", None, "act_expert_mlp")
+    eout = jnp.einsum("GECf,Efd->GECd", h, p["w_down"])
+    out = jnp.einsum("GgEC,GECd->Ggd", combine.astype(x.dtype), eout)
+
+    out = out.reshape(-1, D)
+    if pad:
+        out = out[:S]
+    if m.num_shared > 0:
+        sp = p["shared"]
+        out = out + _glu(xf[:S] if pad else xf, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return out.reshape(B, T, D), aux

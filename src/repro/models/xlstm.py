@@ -1,0 +1,307 @@
+"""xLSTM blocks (sLSTM + mLSTM) [arXiv:2405.04517].
+
+mLSTM: matrix-memory LSTM with exponential gating — per head a (dh x dh)
+covariance state updated as C_t = f_t C_{t-1} + i_t v_t k_t^T, read out with
+q. Training/prefill run a CHUNKWISE-PARALLEL form (intra-chunk quadratic with
+log-gate cumsums + inter-chunk recurrent state, all with the max-stabilizer
+m); decode is the O(dh^2) recurrent step. A pure sequential reference
+(``mlstm_seq_ref``) exists for property tests.
+
+The mLSTM matrix memory is itself an associative memory — the paper's §V
+"attention as nearest-neighbor retrieval" view; but there is no KV cache, so
+T1-T3 are inapplicable (DESIGN.md §5).
+
+sLSTM: scalar-memory LSTM with recurrent (block-diagonal per head) gate
+connections — inherently sequential; lax.scan over time in all phases.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.param import ParamDef
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+
+
+def _mdims(cfg: ModelConfig):
+    d_in = int(cfg.xlstm.proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    return d_in, H, d_in // H
+
+
+# ===================================================================== mLSTM
+
+
+def mlstm_defs(cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    d_in, H, dh = _mdims(cfg)
+    K = cfg.xlstm.conv_kernel
+    return {
+        "up": ParamDef((d, 2 * d_in), dt, ("embed", "mlp"), init="fan_in"),
+        "conv_w": ParamDef((K, d_in), dt, (None, "mlp"), init="fan_in"),
+        "conv_b": ParamDef((d_in,), jnp.float32, (None,), init="zeros"),
+        "wq": ParamDef((d_in, d_in), dt, ("mlp", None), init="fan_in"),
+        "wk": ParamDef((d_in, d_in), dt, ("mlp", None), init="fan_in"),
+        "wv": ParamDef((d_in, d_in), dt, ("mlp", None), init="fan_in"),
+        "w_if": ParamDef((d_in, 2 * H), jnp.float32, ("mlp", None), init="fan_in"),
+        "b_if": ParamDef((2 * H,), jnp.float32, (None,), init="zeros"),
+        "norm": ParamDef((d_in,), jnp.float32, (None,), init="ones"),
+        "down": ParamDef((d_in, d), dt, ("mlp", "embed"), init="fan_in"),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array     # (B, H, dh, dh) f32
+    n: jax.Array     # (B, H, dh) f32
+    m: jax.Array     # (B, H) f32 stabilizer
+    conv: jax.Array  # (B, K-1, d_in)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    d_in, H, dh = _mdims(cfg)
+    K = cfg.xlstm.conv_kernel
+    return MLSTMState(
+        C=jnp.zeros((batch, H, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, H, dh), jnp.float32),
+        m=jnp.full((batch, H), -30.0, jnp.float32),
+        conv=jnp.zeros((batch, K - 1, d_in), cfg.param_dtype),
+    )
+
+
+def _mlstm_qkv_gates(cfg: ModelConfig, p, x: jax.Array, conv_state):
+    """Shared pre-processing. x: (B, T, d_model)."""
+    B, T, _ = x.shape
+    d_in, H, dh = _mdims(cfg)
+    K = cfg.xlstm.conv_kernel
+    up = x @ p["up"]
+    up = constrain(up, "act_batch", None, "act_mlp")
+    xm, z = up[..., :d_in], up[..., d_in:]
+
+    xin = xm if conv_state is None else jnp.concatenate(
+        [conv_state.astype(xm.dtype), xm], axis=1)
+    xp = jnp.pad(xin, ((0, 0), (K - 1, 0), (0, 0))) if conv_state is None else xin
+    y = jax.lax.conv_general_dilated(
+        xp, p["conv_w"][:, None, :].astype(xm.dtype), (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=d_in)
+    xc = jax.nn.silu(y[:, -T:] + p["conv_b"].astype(xm.dtype))
+
+    q = (xc @ p["wq"]).reshape(B, T, H, dh)
+    k = ((xc @ p["wk"]) * (dh ** -0.5)).reshape(B, T, H, dh)
+    v = (xm @ p["wv"]).reshape(B, T, H, dh)
+    gif = (xc.astype(jnp.float32) @ p["w_if"]) + p["b_if"]
+    ig, fg = gif[..., :H], gif[..., H:]          # (B, T, H) pre-activations
+    logf = jax.nn.log_sigmoid(fg)
+    conv_tail = xin[:, -(K - 1):] if conv_state is not None else (
+        jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))[:, -(K - 1):])
+    return q, k, v, ig, logf, z, xc, conv_tail
+
+
+def _chunk(x, L):
+    """(B, T, ...) -> (nc, B, L, ...) with T % L == 0."""
+    B, T = x.shape[:2]
+    return x.reshape(B, T // L, L, *x.shape[2:]).swapaxes(0, 1)
+
+
+def mlstm_forward(cfg: ModelConfig, p, x: jax.Array, state: MLSTMState | None = None):
+    """Chunkwise-parallel full-sequence forward. Returns (y, final_state)."""
+    B, T, _ = x.shape
+    d_in, H, dh = _mdims(cfg)
+    if state is None:
+        st = init_mlstm_state(cfg, B)
+        conv0 = None
+    else:
+        st = state
+        conv0 = state.conv
+    q, k, v, ig, logf, z, xc, conv_tail = _mlstm_qkv_gates(cfg, p, x, conv0)
+
+    L = min(cfg.xlstm.chunk, T)
+    pad = (-T) % L
+    valid = jnp.arange(T + pad, dtype=jnp.int32) < T  # pad-token mask
+    if pad:
+        zpad = lambda a: jnp.pad(  # noqa: E731
+            a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        q, k, v, ig, logf = zpad(q), zpad(k), zpad(v), zpad(ig), zpad(logf)
+    Tp = T + pad
+
+    cq, ck, cv = _chunk(q, L), _chunk(k, L), _chunk(v, L)
+    cig, clogf = _chunk(ig, L), _chunk(logf, L)
+    cvalid = valid.reshape(Tp // L, L)
+
+    def chunk_step(carry, inp):
+        # NUMERICS: masked log-weights are handled by exp(clip(. , -80, 0))
+        # FOLLOWED by a multiplicative 0/1 mask — never exp of a +-1e9
+        # sentinel. (XLA fusions of exp around huge sentinels produced
+        # NaN gradients under jit; exact-zero masking after a clipped exp
+        # is both exact and safe. See EXPERIMENTS.md §Perf notes.)
+        C, n, m = carry                      # (B,H,dh,dh), (B,H,dh), (B,H)
+        q, k, v, ig, logf, vmask = inp       # (B,L,H,dh) / (B,L,H) / (L,)
+        qf = q.astype(jnp.float32)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        b = jnp.cumsum(logf, axis=1)         # (B,L,H) within-chunk log decay
+        # raw log weight of source j at target i: b_i - b_j + ig_j (finite)
+        li = b[:, :, None, :] - b[:, None, :, :] + ig[:, None, :, :]  # (B,i,j,H)
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        allowed = (causal & vmask[None, :])[None, :, :, None]          # (1,i,j,1)
+        # stabilizer per target: max over allowed sources vs inter-chunk
+        m_intra = jnp.max(jnp.where(allowed, li, -1e9), axis=2)        # (B,L,H)
+        m_inter = b + m[:, None, :]
+        m_t = jnp.maximum(m_intra, m_inter)
+        # allowed entries satisfy li <= m_t, so clipping at 0 is exact
+        w = jnp.exp(jnp.clip(li - m_t[:, :, None, :], -80.0, 0.0)) * allowed
+        # intra-chunk numerator / denominator
+        s = jnp.einsum("bihd,bjhd->bijh", qf, kf)           # raw q.k
+        num_intra = jnp.einsum("bijh,bijh,bjhd->bihd", w, s, vf)
+        den_intra = jnp.einsum("bijh,bijh->bih", w, s)
+        # inter-chunk via carried state
+        scale_in = jnp.exp(jnp.clip(m_inter - m_t, -80.0, 0.0))
+        num_inter = jnp.einsum("bihe,bhde->bihd", qf, C) * scale_in[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qf, n) * scale_in
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        floor = jnp.exp(jnp.clip(-m_t, -80.0, 80.0))
+        h = num / jnp.maximum(jnp.abs(den), floor)[..., None]
+        # state update to end of chunk
+        sS = b[:, -1:, :] - b + ig                           # (B,L,H) raw
+        m_new = jnp.maximum(b[:, -1] + m,
+                            jnp.max(jnp.where(vmask[None, :, None], sS, -1e9),
+                                    axis=1))
+        wS = jnp.exp(jnp.clip(sS - m_new[:, None, :], -80.0, 0.0)) \
+            * vmask[None, :, None]
+        decay = jnp.exp(jnp.clip(b[:, -1, :] + m - m_new, -80.0, 0.0))
+        C_new = (decay[..., None, None] * C
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", wS, vf, kf))
+        n_new = (decay[..., None] * n
+                 + jnp.einsum("bjh,bjhd->bhd", wS, kf))
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(
+        chunk_step, (st.C, st.n, st.m), (cq, ck, cv, cig, clogf, cvalid))
+    h = hs.swapaxes(0, 1).reshape(B, Tp, H, dh)[:, :T]
+
+    # per-head RMS norm (GroupNorm analogue), gate, project down
+    hf = h.astype(jnp.float32)
+    hn = hf * jax.lax.rsqrt(jnp.mean(hf * hf, -1, keepdims=True) + 1e-6)
+    hn = (hn.reshape(B, T, d_in) * p["norm"]).astype(x.dtype)
+    y = hn * jax.nn.silu(z)
+    out = y @ p["down"]
+    return constrain(out, "act_batch", None, None), MLSTMState(C, n, m, conv_tail)
+
+
+def mlstm_decode(cfg: ModelConfig, p, x_t: jax.Array, state: MLSTMState):
+    """O(dh^2) recurrent step. x_t: (B, 1, d_model)."""
+    B = x_t.shape[0]
+    d_in, H, dh = _mdims(cfg)
+    q, k, v, ig, logf, z, xc, conv_tail = _mlstm_qkv_gates(cfg, p, x_t, state.conv)
+    qf, kf, vf = (a[:, 0].astype(jnp.float32) for a in (q, k, v))
+    ig, logf = ig[:, 0], logf[:, 0]  # (B, H)
+
+    m_new = jnp.maximum(logf + state.m, ig)
+    i_p = jnp.exp(ig - m_new)
+    f_p = jnp.exp(logf + state.m - m_new)
+    C = f_p[..., None, None] * state.C + i_p[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", vf, kf)
+    n = f_p[..., None] * state.n + i_p[..., None] * kf
+    num = jnp.einsum("bhde,bhe->bhd", C, qf)
+    den = jnp.einsum("bhd,bhd->bh", n, qf)
+    floor = jnp.exp(jnp.clip(-m_new, -80.0, 80.0))
+    h = num / jnp.maximum(jnp.abs(den), floor)[..., None]  # (B,H,dh)
+
+    hf = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+    hn = (hf.reshape(B, 1, d_in) * p["norm"]).astype(x_t.dtype)
+    y = hn * jax.nn.silu(z)
+    return y @ p["down"], MLSTMState(C, n, m_new, conv_tail)
+
+
+def mlstm_seq_ref(cfg: ModelConfig, p, x: jax.Array):
+    """Pure sequential oracle for the chunkwise form (tests only)."""
+    B, T, _ = x.shape
+    state = init_mlstm_state(cfg, B)
+    outs = []
+    for t in range(T):
+        y, state = mlstm_decode(cfg, p, x[:, t:t + 1], state)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1), state
+
+
+# ===================================================================== sLSTM
+
+
+def slstm_defs(cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.param_dtype
+    H = cfg.num_heads
+    dh = d // H
+    pf = cfg.xlstm.proj_factor
+    up = int(pf * d)
+    return {
+        "w": ParamDef((d, 4 * d), dt, ("embed", "mlp"), init="fan_in"),
+        "r": ParamDef((4, H, dh, dh), dt, (None, "heads", None, None), init="fan_in"),
+        "b": ParamDef((4 * d,), jnp.float32, (None,), init="zeros"),
+        "norm": ParamDef((d,), jnp.float32, (None,), init="ones"),
+        "up_1": ParamDef((d, up), dt, ("embed", "mlp"), init="fan_in"),
+        "up_2": ParamDef((d, up), dt, ("embed", "mlp"), init="fan_in"),
+        "down": ParamDef((up, d), dt, ("mlp", "embed"), init="fan_in"),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, d) f32
+    n: jax.Array
+    h: jax.Array
+    m: jax.Array
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, d), -30.0, jnp.float32))
+
+
+def _slstm_step(cfg: ModelConfig, p, wx_t: jax.Array, st: SLSTMState) -> tuple[SLSTMState, jax.Array]:
+    """wx_t: (B, 4d) precomputed input projection for one step."""
+    B = wx_t.shape[0]
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    hh = st.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hh.astype(p["r"].dtype), p["r"])  # (B,4,H,dh)
+    pre = wx_t.reshape(B, 4, d).astype(jnp.float32) + rec.reshape(B, 4, d).astype(jnp.float32)
+    zt, it, ft, ot = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + st.m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + st.m - m_new)
+    c = f_p * st.c + i_p * jnp.tanh(zt)
+    n = f_p * st.n + i_p
+    h = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, h, m_new), h
+
+
+def slstm_forward(cfg: ModelConfig, p, x: jax.Array, state: SLSTMState | None = None):
+    B, T, d = x.shape
+    st = state or init_slstm_state(cfg, B)
+    wx = x @ p["w"] + p["b"].astype(x.dtype)  # (B, T, 4d)
+
+    def step(s, wx_t):
+        s2, h = _slstm_step(cfg, p, wx_t, s)
+        return s2, h
+
+    st, hs = jax.lax.scan(step, st, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)  # (B, T, d) f32
+    hn = (h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+          * p["norm"]).astype(x.dtype)
+    y = jax.nn.gelu(hn @ p["up_1"]) * (hn @ p["up_2"])
+    out = y @ p["down"]
+    return constrain(out, "act_batch", None, None), st
+
+
+def slstm_decode(cfg: ModelConfig, p, x_t: jax.Array, state: SLSTMState):
+    wx = (x_t @ p["w"] + p["b"].astype(x_t.dtype))[:, 0]
+    st, h = _slstm_step(cfg, p, wx, state)
+    hn = (h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6)
+          * p["norm"]).astype(x_t.dtype)[:, None]
+    y = jax.nn.gelu(hn @ p["up_1"]) * (hn @ p["up_2"])
+    return y @ p["down"], st

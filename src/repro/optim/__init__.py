@@ -1,0 +1,3 @@
+from repro.optim.optimizers import Optimizer, adamw, adafactor, apply_updates  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401
+from repro.optim.compression import compress_int8, decompress_int8, compressed_psum  # noqa: F401

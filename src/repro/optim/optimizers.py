@@ -1,0 +1,186 @@
+"""Optimizers (no optax in this environment — built from scratch).
+
+* ``adamw``     — f32 moments; standard for <=20B models.
+* ``adafactor`` — factored second moment for >=2D params + bf16 first moment:
+  ~2.1 bytes/param of state instead of 8, which is what lets jamba-398b train
+  on a single 256-chip pod (see DESIGN.md §4 memory budget).
+
+All state tensors inherit the parameter's sharding (spec trees mirror the
+param tree), so FSDP shards optimizer state for free (ZeRO-3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # mirror of init for ShapeDtypeStructs
+    state_like: Callable[[Any], Any]
+    # (param_specs, abstract_params) -> state PartitionSpec tree
+    state_specs: Callable[[Any, Any], Any]
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+# ------------------------------------------------------------------- adamw
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float, b1=0.9, b2=0.95,
+          eps=1e-8, weight_decay=0.1, max_grad_norm=1.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def state_like(params):
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)  # noqa: E731
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32))
+            return u, m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        us = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        ms = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        vs = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return us, AdamWState(ms, vs)
+
+    def state_specs(param_specs, abstract_params):
+        return AdamWState(param_specs, param_specs)
+
+    return Optimizer(init, update, state_like, state_specs)
+
+
+# ---------------------------------------------------------------- adafactor
+
+
+class AdafactorState(NamedTuple):
+    m: Any        # bf16 first moment
+    v_row: Any    # f32 factored second moment (rows)  — 2D+ params
+    v_col: Any    # f32 factored second moment (cols)
+    v_full: Any   # f32 full second moment — 0/1-D params
+
+
+def adafactor(lr: Callable[[jax.Array], jax.Array] | float, b1=0.9, decay=0.99,
+              eps=1e-30, weight_decay=0.0, max_grad_norm=1.0,
+              clip_threshold=1.0) -> Optimizer:
+    """Adafactor with momentum (bf16) and row/col-factored v for params with
+    ndim >= 2 (factored over the last two dims)."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def _shapes(p):
+        if p.ndim >= 2:
+            return p.shape[:-1], p.shape[:-2] + p.shape[-1:], None
+        return None, None, p.shape
+
+    def init(params):
+        def zr(p):
+            r, c, f = _shapes(p)
+            return (jnp.zeros(p.shape, jnp.bfloat16),
+                    jnp.zeros(r, jnp.float32) if r else jnp.zeros((1,), jnp.float32),
+                    jnp.zeros(c, jnp.float32) if c else jnp.zeros((1,), jnp.float32),
+                    jnp.zeros(f, jnp.float32) if f else jnp.zeros((1,), jnp.float32))
+        out = jax.tree.map(zr, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,  # noqa: E731
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return AdafactorState(pick(0), pick(1), pick(2), pick(3))
+
+    def state_like(params):
+        def zr(p):
+            r, c, f = _shapes(p)
+            return (jax.ShapeDtypeStruct(p.shape, jnp.bfloat16),
+                    jax.ShapeDtypeStruct(r if r else (1,), jnp.float32),
+                    jax.ShapeDtypeStruct(c if c else (1,), jnp.float32),
+                    jax.ShapeDtypeStruct(f if f else (1,), jnp.float32))
+        out = jax.tree.map(zr, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,  # noqa: E731
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return AdafactorState(pick(0), pick(1), pick(2), pick(3))
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        t = step.astype(jnp.float32) + 1.0
+        beta2t = 1.0 - t ** -0.8  # Adafactor schedule, bounded by `decay`
+        beta2t = jnp.minimum(beta2t, decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, m, vr, vc, vf, p):
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr2 = beta2t * vr + (1 - beta2t) * jnp.mean(g2, axis=-1)
+                vc2 = beta2t * vc + (1 - beta2t) * jnp.mean(g2, axis=-2)
+                r = vr2 / jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True), eps)
+                vhat = r[..., None] * vc2[..., None, :]
+                vf2 = vf
+            else:
+                vf2 = beta2t * vf + (1 - beta2t) * g2
+                vhat = vf2
+                vr2, vc2 = vr, vc
+            u = g / jnp.sqrt(vhat + eps)
+            # update clipping (RMS(u) <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            m2 = (b1 * m.astype(jnp.float32) + (1 - b1) * u).astype(jnp.bfloat16)
+            du = -lr_t * (m2.astype(jnp.float32) + weight_decay * p.astype(jnp.float32))
+            return du, m2, vr2, vc2, vf2
+
+        out = jax.tree.map(upd, grads, state.m, state.v_row, state.v_col,
+                           state.v_full, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,  # noqa: E731
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), AdafactorState(pick(1), pick(2), pick(3), pick(4))
+
+    def state_specs(param_specs, abstract_params):
+        from jax.sharding import PartitionSpec as P
+
+        def per(spec, p):
+            s = tuple(spec)
+            if p.ndim >= 2:
+                return (P(*s), P(*s[:-1]), P(*s[:-2], s[-1]), P(None))
+            return (P(*s), P(None), P(None), P(*s))
+
+        out = jax.tree.map(per, param_specs, abstract_params,
+                           is_leaf=lambda x: isinstance(x, P))
+        is4 = lambda x: isinstance(x, tuple) and len(x) == 4 and all(  # noqa: E731
+            isinstance(e, P) for e in x)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=is4)  # noqa: E731
+        return AdafactorState(pick(0), pick(1), pick(2), pick(3))
+
+    return Optimizer(init, update, state_like, state_specs)

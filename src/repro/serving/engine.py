@@ -1,0 +1,89 @@
+"""Batched serving engine: prefill -> decode loop with sampling, EOS
+handling, and mode-selectable caches (dense / T1 decomposed / T2 CPQ /
+T3 retrieval). The paper's end-to-end inference path.
+
+Static-shape design (TPU-friendly): the request batch is padded to a fixed
+size; prompts are right-padded to a common length (per-row lengths masked at
+sampling); the decode loop is one jitted step reused every token. Cache
+traffic per token is the mode's bytes/token (see kv_cache.bytes_per_token and
+benchmarks/bench_e2e_energy.py for the traffic model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import AttentionRuntime, ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+    top_p: float = 1.0
+    eos_id: int = -1              # -1 => never stop early
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, rt: Optional[AttentionRuntime] = None,
+                 max_len: int = 4096):
+        self.cfg = cfg
+        self.rt = rt or cfg.attention
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(partial(M.prefill, cfg, self.rt))
+        self._decode = jax.jit(partial(M.decode_step, cfg, self.rt))
+
+    def _sample(self, logits: jax.Array, key, gen: GenerationConfig) -> jax.Array:
+        if gen.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        logits = logits / gen.temperature
+        if gen.top_p < 1.0:
+            sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+            probs = jax.nn.softmax(sorted_l, axis=-1)
+            cum = jnp.cumsum(probs, axis=-1)
+            k = jnp.sum(cum < gen.top_p, axis=-1, keepdims=True)
+            thresh = jnp.take_along_axis(sorted_l, k, axis=-1)
+            logits = jnp.where(logits < thresh, -1e30, logits)
+        return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    def generate(self, batch: dict, gen: GenerationConfig = GenerationConfig()):
+        """batch: {'tokens': (B, S)} (+frames/patches per input_kind).
+        Returns (generated (B, max_new_tokens) int32, stats dict)."""
+        cfg = self.cfg
+        prompt = batch.get("tokens", batch.get("frames"))
+        B, S = prompt.shape[0], prompt.shape[1]
+        n_max = S + gen.max_new_tokens
+        assert n_max <= self.max_len + gen.max_new_tokens
+
+        caches = M.init_caches(cfg, self.rt, B, n_max)
+        logits, caches = self._prefill(self.params, batch, caches)
+
+        key = jax.random.PRNGKey(gen.seed)
+        toks = []
+        done = jnp.zeros((B,), bool)
+        tok = self._sample(logits, key, gen)
+        for t in range(gen.max_new_tokens):
+            toks.append(np.asarray(tok))
+            if gen.eos_id >= 0:
+                done = done | (tok == gen.eos_id)
+                if bool(jnp.all(done)):
+                    break
+            key, sub = jax.random.split(key)
+            logits, caches = self._decode(self.params, tok[:, None],
+                                          jnp.asarray(S + t, jnp.int32), caches)
+            tok = self._sample(logits, sub, gen)
+        out = np.stack(toks, axis=1)
+        stats = {
+            "prompt_tokens": int(B * S),
+            "generated_tokens": int(out.size),
+            "cache_mode": self.rt.mode,
+        }
+        return out, stats

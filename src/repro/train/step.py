@@ -1,0 +1,59 @@
+"""Training step: loss -> grads -> optimizer update, with microbatch
+gradient accumulation (lax.scan) and remat. Pure function of
+(params, opt_state, step_idx, batch) -> (params, opt_state, metrics) so it
+jits/pjits directly; sharding comes from in/out_shardings at the call site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.optim.optimizers import Optimizer, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepCfg:
+    microbatches: int = 1
+    remat: bool = True
+    aux_weight: float = 0.01
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, tcfg: TrainStepCfg):
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            partial(loss_fn, cfg), has_aux=True)(
+                params, batch=batch, remat=tcfg.remat, aux_weight=tcfg.aux_weight)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, step_idx, batch):
+        k = tcfg.microbatches
+        if k == 1:
+            loss, metrics, grads = grads_of(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mb = jax.tree.map(lambda x: x.reshape(k, x.shape[0] // k, *x.shape[1:]),
+                              batch)
+
+            def acc(carry, mbatch):
+                gacc, lacc = carry
+                loss, _, grads = grads_of(params, mbatch)
+                gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return (gacc, lacc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(acc, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = loss_sum / k
+            metrics = {"nll": loss, "aux": jnp.zeros((), jnp.float32)}
+
+        updates, opt_state = optimizer.update(grads, opt_state, params, step_idx)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step

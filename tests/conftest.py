@@ -1,0 +1,33 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — unit/smoke tests must see
+the real single CPU device (the 512-device override belongs ONLY to
+launch/dryrun.py). Multi-device tests spawn subprocesses."""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def run8():
+    """Run a code snippet in a subprocess with 8 virtual host devices."""
+    return lambda code, n=8: run_with_devices(code, n)
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 420) -> str:
+    """Run ``code`` in a subprocess with n virtual host devices; returns
+    stdout. Raises on nonzero exit."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout

@@ -1,0 +1,93 @@
+"""T2 CPQ + HQE property tests (paper §IV invariants)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CPQCfg
+from repro.core import cpq as C
+
+
+@hypothesis.given(
+    bits=st.sampled_from([4, 8]),
+    prune=st.floats(0.0, 0.7),
+    seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_roundtrip_error_bound(bits, prune, seed):
+    """Kept elements reconstruct within scale/2; pruned dequant to EXACTLY 0;
+    keep fraction ~ 1 - prune_ratio."""
+    cfg = CPQCfg(prune_ratio=prune, bits=bits)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 64, 4, 8))
+    t = C.cpq_compress_prefill(x, cfg, 64)
+    d = {k: float(v) for k, v in C.cpq_roundtrip_error(x, t).items()}
+    bound = float(np.asarray(t.scale[:, 0]).max()) / 2 * 1.02 + 1e-6
+    assert d["max_err_kept"] <= bound
+    assert d["pruned_exact_zero"] == 0.0
+    assert abs(d["keep_frac"] - (1 - prune)) < 0.15
+
+
+def test_hqe_token_quantized_once():
+    """Appending new tokens never rewrites earlier codes or level-0 params
+    (the paper's 'each token is quantized once' guarantee)."""
+    cfg = CPQCfg(prune_ratio=0.3, bits=8, max_levels=4)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 32, 4, 8))
+    t = C.cpq_compress_prefill(x, cfg, 64)
+    codes0 = np.asarray(t.codes[:, :32]).copy()
+    scale0 = np.asarray(t.scale[:, 0]).copy()
+    for i in range(8):
+        tok = (3.0 + i) * jax.random.normal(jax.random.fold_in(key, i), (2, 1, 4, 8))
+        t = C.cpq_append_decode(t, tok, jnp.asarray(32 + i, jnp.int32), cfg)
+    assert np.array_equal(np.asarray(t.codes[:, :32]), codes0)
+    assert np.array_equal(np.asarray(t.scale[:, 0]), scale0)
+
+
+def test_hqe_levels_monotone_and_capped():
+    cfg = CPQCfg(prune_ratio=0.0, bits=8, max_levels=3)
+    key = jax.random.PRNGKey(1)
+    x = 0.1 * jax.random.normal(key, (1, 16, 2, 4))
+    t = C.cpq_compress_prefill(x, cfg, 64)
+    prev = np.asarray(t.num_levels).copy()
+    for i in range(6):
+        tok = (5.0 * (i + 1)) * jnp.ones((1, 1, 2, 4))
+        t = C.cpq_append_decode(t, tok, jnp.asarray(16 + i, jnp.int32), cfg)
+        cur = np.asarray(t.num_levels)
+        assert np.all(cur >= prev)
+        prev = cur
+    assert np.asarray(t.num_levels).max() <= cfg.max_levels
+
+
+def test_hqe_range_extension_covers_outlier():
+    """A spawned level's range includes the outlier (near-exact recon)."""
+    cfg = CPQCfg(prune_ratio=0.0, bits=8, max_levels=4)
+    x = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (1, 16, 2, 4))
+    t = C.cpq_compress_prefill(x, cfg, 32)
+    t = C.cpq_append_decode(t, 9.0 * jnp.ones((1, 1, 2, 4)),
+                            jnp.asarray(16, jnp.int32), cfg)
+    xh = C.cpq_dequant(t, jnp.float32)
+    assert float(jnp.abs(xh[:, 16] - 9.0).max()) < 0.05
+
+
+def test_in_range_token_reuses_level():
+    cfg = CPQCfg(prune_ratio=0.0, bits=8, max_levels=4)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 32, 2, 4))
+    t = C.cpq_compress_prefill(x, cfg, 64)
+    lv0 = np.asarray(t.num_levels).copy()
+    t = C.cpq_append_decode(t, 0.1 * jnp.ones((1, 1, 2, 4)),
+                            jnp.asarray(32, jnp.int32), cfg)
+    assert np.array_equal(np.asarray(t.num_levels), lv0)
+
+
+def test_traffic_model_orders():
+    """CPQ bytes/token < dense bf16 bytes/token for sane configs, and 4-bit
+    beats 8-bit."""
+    from repro.core.cpq import cpq_bytes_per_token, dense_bytes_per_token
+
+    h, d = 8, 128
+    dense = dense_bytes_per_token(h, d)
+    b8 = cpq_bytes_per_token(CPQCfg(prune_ratio=0.4, bits=8), h, d)
+    b4 = cpq_bytes_per_token(CPQCfg(prune_ratio=0.4, bits=4), h, d)
+    assert b4 < b8 < dense
+    assert dense / b4 > 4  # the headline compression regime

@@ -1,0 +1,109 @@
+"""T1 matrix decomposition: algebraic exactness properties (paper §III)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.attention import dense_attention
+from repro.core.decomposed_attention import (
+    decomposed_attention,
+    decomposed_query_transform,
+    decomposed_scores,
+    decomposed_values,
+)
+
+dims = st.sampled_from([(4, 2, 8, 32, 48), (8, 8, 16, 64, 64), (6, 3, 8, 24, 40)])
+
+
+@hypothesis.given(dims=dims, seed=st.integers(0, 2**16))
+@hypothesis.settings(max_examples=12, deadline=None)
+def test_decomposition_exact_vs_dense(dims, seed):
+    """Out = Q K^T == (Q W_K^T) X^T and S V == (S X) W_V, for any GQA config
+    with K = X W_K, V = X W_V (no positional rotation)."""
+    H, KV, Dh, Dm, N = dims
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (2, N, Dm), jnp.float32)
+    wk = jax.random.normal(ks[1], (Dm, KV, Dh)) / np.sqrt(Dm)
+    wv = jax.random.normal(ks[2], (Dm, KV, Dh)) / np.sqrt(Dm)
+    q = jax.random.normal(ks[3], (2, 1, H, Dh))
+    k = jnp.einsum("bnm,mkd->bnkd", x, wk)
+    v = jnp.einsum("bnm,mkd->bnkd", x, wv)
+    length = jnp.asarray(N, jnp.int32)
+    ref = dense_attention(q, k, v, Dh**-0.5, causal=False, kv_length=length)
+    dec = decomposed_attention(q, jnp.zeros((2, 1, H, 0)), x,
+                               jnp.zeros((2, N, KV, 0)), wk, wv, length, Dh**-0.5)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(dec), atol=2e-5)
+
+
+def test_cascaded_matmuls_associativity(rng):
+    """R = Q W_K^T then R X^T equals Q (X W_K)^T elementwise (pre-softmax)."""
+    H, KV, Dh, Dm, N = 8, 4, 16, 64, 32
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 3, H, Dh))
+    x = jax.random.normal(ks[1], (2, N, Dm))
+    wk = jax.random.normal(ks[2], (Dm, KV, Dh))
+    r = decomposed_query_transform(q, wk)
+    s1 = decomposed_scores(r, x)
+    k = jnp.einsum("bnm,mkd->bnkd", x, wk)
+    g = H // KV
+    s2 = jnp.einsum("btkgd,bnkd->btkgn", q.reshape(2, 3, KV, g, Dh), k)
+    s2 = s2.reshape(2, 3, H, N)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_value_stage(rng):
+    """S V == (S X) W_V."""
+    H, KV, Dh, Dm, N = 4, 4, 16, 32, 24
+    ks = jax.random.split(rng, 3)
+    s = jax.nn.softmax(jax.random.normal(ks[0], (2, 1, H, N)), -1)
+    x = jax.random.normal(ks[1], (2, N, Dm))
+    wv = jax.random.normal(ks[2], (Dm, KV, Dh))
+    v = jnp.einsum("bnm,mkd->bnkd", x, wv)
+    out1 = decomposed_values(s, x, wv)
+    out2 = jnp.einsum("btkgn,bnkd->btkgd",
+                      s.reshape(2, 1, KV, 1, N), v).reshape(2, 1, H, Dh)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=2e-4, atol=2e-4)
+
+
+def test_mla_absorbed_equals_naive_f32():
+    """DeepSeek MLA absorbed decode (= paper's decomposition over the learned
+    latent) matches the naive path exactly in f32."""
+    import dataclasses
+    from repro.configs import ARCHS, smoke_config
+    from repro.common.param import init_tree
+    from repro.models import mla as mla_lib
+
+    cfg = dataclasses.replace(smoke_config(ARCHS["deepseek-v2-lite-16b"]),
+                              dtype="float32")
+    key = jax.random.PRNGKey(1)
+    p = init_tree(mla_lib.mla_defs(cfg), key)
+    B, S = 2, 12
+    x = jax.random.normal(key, (B, S + 1, cfg.d_model), jnp.float32)
+    full = mla_lib.mla_train(cfg, p, x, jnp.arange(S + 1))
+    cache = mla_lib.init_mla_cache(cfg, cfg.attention, B, S + 4)
+    _, cache = mla_lib.mla_prefill(cfg, cfg.attention, p, x[:, :S],
+                                   jnp.arange(S), cache)
+    y, cache = mla_lib.mla_decode(cfg, cfg.attention, p, x[:, S:S + 1],
+                                  jnp.asarray(S, jnp.int32), cache)
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(full[:, S]),
+                               atol=3e-5)
+
+
+def test_decode_cache_traffic_wins_for_mha():
+    """The T1 X-cache halves per-token decode traffic exactly when
+    kv_heads * head_dim == d_model (MHA archs; DESIGN.md §5 table)."""
+    from repro.configs import ARCHS
+    from repro.models.attention_layer import decoupled_rope_dims
+
+    for name in ("musicgen-large", "deepseek-moe-16b", "qwen1.5-0.5b", "opt-6.7b"):
+        cfg = ARCHS[name]
+        dense_b = 2 * cfg.num_kv_heads * cfg.head_dim
+        x_b = cfg.d_model + cfg.num_kv_heads * decoupled_rope_dims(cfg)
+        assert x_b < dense_b, name
+    for name in ("gemma-2b", "phi4-mini-3.8b", "qwen3-4b"):
+        cfg = ARCHS[name]
+        dense_b = 2 * cfg.num_kv_heads * cfg.head_dim
+        assert cfg.d_model >= dense_b, name  # GQA/MQA: decomposition off

@@ -1,0 +1,92 @@
+"""T3 retrieval attention properties (paper §V)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RetrievalCfg
+from repro.core import retrieval_attention as R
+from repro.core.attention import dense_attention
+
+
+def _setup(seed, B=2, N=96, H=8, KV=4, Dh=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, Dh))
+    k = jax.random.normal(ks[1], (B, N, KV, Dh))
+    v = jax.random.normal(ks[2], (B, N, KV, Dh))
+    return q, k, v
+
+
+def test_full_topk_equals_dense():
+    q, k, v = _setup(0)
+    N = k.shape[1]
+    codes, ps, pz = R.fit_proxy(k, 8)
+    cfg = RetrievalCfg(top_k=N, recent_window=4)
+    length = jnp.asarray(N, jnp.int32)
+    out = R.retrieval_attention(q, k, v, codes, ps, pz, length, cfg, 0.25)
+    ref = dense_attention(q, k, v, 0.25, causal=False, kv_length=length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@hypothesis.given(seed=st.integers(0, 2**16))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_error_decreases_with_k(seed):
+    q, k, v = _setup(seed)
+    N = k.shape[1]
+    codes, ps, pz = R.fit_proxy(k, 8)
+    length = jnp.asarray(N, jnp.int32)
+    ref = dense_attention(q, k, v, 0.25, causal=False, kv_length=length)
+    errs = []
+    for topk in (8, 32, N):
+        cfg = RetrievalCfg(top_k=topk, recent_window=4)
+        out = R.retrieval_attention(q, k, v, codes, ps, pz, length, cfg, 0.25)
+        errs.append(float(jnp.abs(out - ref).max()))
+    assert errs[2] <= errs[0] + 1e-5
+    assert errs[2] < 1e-4
+
+
+def test_proxy_recall():
+    """int8 proxy top-k recalls >= 90% of exact top-k keys."""
+    q, k, v = _setup(3, N=128)
+    codes, ps, pz = R.fit_proxy(k, 8)
+    sp = R.proxy_scores(q, codes, ps, pz)          # (B,1,H,N)
+    B, _, H, N = sp.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, 1, KV, g, -1)
+    se = jnp.einsum("btkgd,bnkd->btkgn", qg, k).reshape(B, 1, H, N)
+    K = 16
+    _, ip = jax.lax.top_k(sp, K)
+    _, ie = jax.lax.top_k(se.astype(jnp.float32), K)
+    recall = np.mean([
+        len(set(np.asarray(ip)[b, 0, h]) & set(np.asarray(ie)[b, 0, h])) / K
+        for b in range(B) for h in range(H)])
+    assert recall >= 0.9, recall
+
+
+def test_recent_window_always_selected():
+    q, k, v = _setup(4)
+    N = k.shape[1]
+    codes, ps, pz = R.fit_proxy(k, 8)
+    cfg = RetrievalCfg(top_k=16, recent_window=8)
+    sp = R.proxy_scores(q, codes, ps, pz)
+    idx = R.select_topk(sp, jnp.asarray(N, jnp.int32), cfg)
+    sel = np.asarray(idx)
+    for t in range(N - 8, N):
+        assert np.all((sel == t).any(axis=-1)), f"recent token {t} not selected"
+
+
+def test_calibration_bounded():
+    """Calibrated outputs never exceed the uncalibrated magnitude (the mass
+    fraction multiplier is in [0, 1])."""
+    q, k, v = _setup(5)
+    N = k.shape[1]
+    codes, ps, pz = R.fit_proxy(k, 8)
+    cfg = RetrievalCfg(top_k=16, recent_window=4)
+    length = jnp.asarray(N, jnp.int32)
+    cal = R.retrieval_attention(q, k, v, codes, ps, pz, length, cfg, 0.25,
+                                calibrate=True)
+    raw = R.retrieval_attention(q, k, v, codes, ps, pz, length, cfg, 0.25,
+                                calibrate=False)
+    assert float(jnp.max(jnp.abs(cal))) <= float(jnp.max(jnp.abs(raw))) * 1.01

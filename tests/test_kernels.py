@@ -1,0 +1,146 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CPQCfg
+from repro.core import cpq as C
+from repro.core import retrieval_attention as R
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("T,S,H,KV,D,causal,bq,bk,dtype", [
+    (128, 128, 4, 2, 64, True, 64, 64, jnp.float32),
+    (256, 256, 8, 8, 128, True, 128, 128, jnp.float32),
+    (100, 100, 4, 1, 32, False, 64, 64, jnp.float32),
+    (192, 192, 6, 3, 64, True, 128, 64, jnp.float32),
+    (128, 128, 4, 4, 64, True, 64, 64, jnp.bfloat16),
+])
+def test_flash_attention_kernel(T, S, H, KV, D, causal, bq, bk, dtype):
+    from repro.kernels.flash_attn.ops import flash_attention_tpu
+    from repro.kernels.flash_attn.ref import flash_attention_ref
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, T, H, D), dtype)
+    k = jax.random.normal(ks[1], (2, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (2, S, KV, D), dtype)
+    out = flash_attention_tpu(q, k, v, D**-0.5, causal, bq, bk)
+    ref = flash_attention_ref(q, k, v, D**-0.5, causal)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("H,Dm,N,Rr,bn,dtype", [
+    (8, 128, 256, 0, 64, jnp.float32),
+    (8, 128, 300, 16, 128, jnp.float32),
+    (16, 64, 512, 32, 256, jnp.float32),
+    (4, 256, 128, 0, 128, jnp.bfloat16),
+])
+def test_decomposed_kernel(H, Dm, N, Rr, bn, dtype):
+    from repro.kernels.decomposed_attn.kernel import decomposed_decode_fwd
+    from repro.kernels.decomposed_attn.ref import decomposed_decode_ref
+
+    ks = jax.random.split(KEY, 4)
+    r = jax.random.normal(ks[0], (2, H, Dm), dtype)
+    qr = jax.random.normal(ks[1], (2, H, Rr), dtype)
+    x = jax.random.normal(ks[2], (2, N, Dm), dtype)
+    kr = jax.random.normal(ks[3], (2, N, Rr), dtype)
+    ln = jnp.asarray(N - 9, jnp.int32)
+    out = decomposed_decode_fwd(r, qr, x, kr, ln, scale=0.1, block_n=bn)
+    ref = decomposed_decode_ref(r, qr, x, kr, ln, 0.1)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_decomposed_op_end_to_end(rng):
+    from repro.core.decomposed_attention import decomposed_attention
+    from repro.kernels.decomposed_attn.ops import decomposed_decode_tpu
+
+    B, H, KV, Dn, Dv, Dm, N = 2, 8, 4, 32, 32, 128, 192
+    ks = jax.random.split(rng, 4)
+    qn = jax.random.normal(ks[0], (B, 1, H, Dn))
+    xc = jax.random.normal(ks[1], (B, N, Dm))
+    wk = jax.random.normal(ks[2], (Dm, KV, Dn)) / np.sqrt(Dm)
+    wv = jax.random.normal(ks[3], (Dm, KV, Dv)) / np.sqrt(Dm)
+    ln = jnp.asarray(N, jnp.int32)
+    o1 = decomposed_decode_tpu(qn, None, xc, None, wk, wv, ln, 0.125, block_n=64)
+    o2 = decomposed_attention(qn, jnp.zeros((B, 1, H, 0)), xc,
+                              jnp.zeros((B, N, KV, 0)), wk, wv, ln, 0.125)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+@pytest.mark.parametrize("bits,KV,G,Dh,N,bn", [
+    (8, 4, 2, 32, 128, 32),
+    (4, 2, 4, 64, 96, 48),
+    (8, 8, 1, 128, 256, 128),
+])
+def test_cpq_dequant_kernel(bits, KV, G, Dh, N, bn):
+    from repro.kernels.cpq_dequant_attn.kernel import cpq_decode_fwd
+    from repro.kernels.cpq_dequant_attn.ref import cpq_decode_ref
+
+    cfg = CPQCfg(prune_ratio=0.3, bits=bits, max_levels=4)
+    ks = jax.random.split(KEY, 3)
+    S0 = N - 16
+    kx = jax.random.normal(ks[0], (2, S0, KV, Dh))
+    vx = jax.random.normal(ks[1], (2, S0, KV, Dh))
+    tk = C.cpq_compress_prefill(kx, cfg, N)
+    tv = C.cpq_compress_prefill(vx, cfg, N)
+    tk = C.cpq_append_decode(tk, 6 * jnp.ones((2, 1, KV, Dh)),
+                             jnp.asarray(S0, jnp.int32), cfg)
+    tv = C.cpq_append_decode(tv, -6 * jnp.ones((2, 1, KV, Dh)),
+                             jnp.asarray(S0, jnp.int32), cfg)
+    q = jax.random.normal(ks[2], (2, KV, G, Dh))
+    ln = jnp.asarray(S0 + 1, jnp.int32)
+    o1 = cpq_decode_fwd(q, tk.codes, tv.codes, tk.scale, tk.zero, tv.scale,
+                        tv.zero, tk.level, tv.level, ln, scale=0.17, block_n=bn)
+    o2 = cpq_decode_ref(q, tk.codes, tv.codes, tk.scale, tk.zero, tv.scale,
+                        tv.zero, tk.level, tv.level, ln, 0.17)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+@pytest.mark.parametrize("KV,G,Dp,N,bn", [(4, 2, 32, 128, 32), (2, 8, 64, 96, 96)])
+def test_proxy_scores_kernel(KV, G, Dp, N, bn):
+    from repro.kernels.topk_retrieval.kernel import proxy_scores_fwd
+    from repro.kernels.topk_retrieval.ref import proxy_scores_ref
+
+    ks = jax.random.split(KEY, 2)
+    kx = jax.random.normal(ks[0], (2, N, KV, Dp))
+    codes, psc, pz = R.fit_proxy(kx, 8)
+    qf = jax.random.normal(ks[1], (2, KV, G, Dp))
+    qs = qf * psc[:, :, None, :]
+    qz = jnp.einsum("bkgd,bkd->bkg", qf, pz)[..., None]
+    ln = jnp.asarray(N - 5, jnp.int32)
+    s1 = proxy_scores_fwd(qs, qz, codes, ln, block_n=bn)
+    s2 = proxy_scores_ref(qs, qz, codes, ln)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4,
+                               atol=1e-3)
+
+
+def test_retrieval_decode_op(rng):
+    """Kernel-based T3 decode == jnp retrieval path (no calibration)."""
+    from repro.configs.base import RetrievalCfg
+    from repro.core import kv_cache as kvc
+    from repro.core.attention import init_cache, prefill_into_cache
+    from repro.configs.base import AttentionRuntime
+    from repro.kernels.topk_retrieval.ops import retrieval_decode_tpu
+
+    B, H, KV, Dh, N = 2, 8, 4, 32, 96
+    rcfg = RetrievalCfg(top_k=N, recent_window=4)
+    rt = AttentionRuntime(mode="retrieval", retrieval=rcfg)
+    ks = jax.random.split(rng, 3)
+    k = jax.random.normal(ks[0], (B, N, KV, Dh))
+    v = jax.random.normal(ks[1], (B, N, KV, Dh))
+    q = jax.random.normal(ks[2], (B, 1, H, Dh))
+    cache = init_cache(rt, batch=B, n_max=N, kv=KV, dh=Dh, d_model=0,
+                       rope_dims=0, dtype=jnp.float32)
+    cache = prefill_into_cache(rt, cache, k=k, v=v, x=None, k_rope=None,
+                               length=jnp.asarray(N, jnp.int32))
+    out = retrieval_decode_tpu(q, cache, rcfg, Dh**-0.5)
+    from repro.core.attention import dense_attention
+    ref = dense_attention(q, k, v, Dh**-0.5, causal=False,
+                          kv_length=jnp.asarray(N, jnp.int32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
