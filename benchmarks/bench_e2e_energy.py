@@ -32,7 +32,11 @@ from repro.models.model import model_defs
 
 
 @dataclasses.dataclass
-class ServingCfg:
+class TrafficCfg:
+    """Per-variant traffic knobs of the analytical model (renamed from the
+    old ``ServingCfg`` — that name now means the continuous-batching serving
+    config in configs/base.py)."""
+
     ctx: int = 2048
     batch: int = 1
     weights_stationary: bool = False   # PIM: weights never leave the macros
@@ -40,7 +44,7 @@ class ServingCfg:
     extra_kv_write_penalty: float = 0.0    # CWC rewrite energy (ReRAM baseline)
 
 
-def decode_token_cost(dev: Device, n_params: float, L: int, cfg: ServingCfg):
+def decode_token_cost(dev: Device, n_params: float, L: int, cfg: TrafficCfg):
     """Per generated token (per sequence), amortized over the batch."""
     macs = n_params + 0.0  # linear layers: one MAC per weight per token
     kv_bytes = cfg.kv_bytes_per_token_layer * L * cfg.ctx
@@ -63,21 +67,31 @@ def main(emit):
                                      cfg.num_kv_heads, cfg.head_dim)
     kv_x_cpq = cpq_bytes_per_token(CPQCfg(prune_ratio=0.4, bits=4), 1,
                                    cfg.d_model)
+    # paged-arena accounting (serving subsystem): same payload through the
+    # same API, plus the amortized block-table entry per page
+    from repro.serving import paged_cache as pgc
+    page_size = 16
+    paged_dense = pgc.init_paged_dense(2, page_size, cfg.num_kv_heads, cfg.head_dim)
+    kv_paged = pgc.bytes_per_token(paged_dense, page_size)
 
     for batch in (1, 8):
         variants = {
-            "a100-dense": (A100, ServingCfg(batch=batch,
+            "a100-dense": (A100, TrafficCfg(batch=batch,
                                             kv_bytes_per_token_layer=kv_dense)),
-            "flightllm": (FLIGHTLLM, ServingCfg(batch=batch,
+            "flightllm": (FLIGHTLLM, TrafficCfg(batch=batch,
                                                 kv_bytes_per_token_layer=kv_dense)),
-            "pim-t1t2": (PIM, ServingCfg(batch=batch, weights_stationary=True,
+            "pim-t1t2": (PIM, TrafficCfg(batch=batch, weights_stationary=True,
                                          kv_bytes_per_token_layer=kv_x_cpq)),
-            "tpu-v5e-dense": (TPU_V5E, ServingCfg(batch=batch,
+            "tpu-v5e-dense": (TPU_V5E, TrafficCfg(batch=batch,
                                                   kv_bytes_per_token_layer=kv_dense)),
-            "tpu-v5e-t1": (TPU_V5E, ServingCfg(batch=batch,
+            "tpu-v5e-t1": (TPU_V5E, TrafficCfg(batch=batch,
                                                kv_bytes_per_token_layer=kv_x)),
-            "tpu-v5e-t1t2": (TPU_V5E, ServingCfg(batch=batch,
+            "tpu-v5e-t1t2": (TPU_V5E, TrafficCfg(batch=batch,
                                                  kv_bytes_per_token_layer=kv_x_cpq)),
+            # continuous-batching serving: paged dense arena (block-table
+            # overhead included; the serving win is utilization, not bytes)
+            "tpu-v5e-paged": (TPU_V5E, TrafficCfg(batch=batch,
+                                                  kv_bytes_per_token_layer=kv_paged)),
         }
         res = {}
         for name, (dev, sc) in variants.items():

@@ -27,18 +27,34 @@ from typing import Any, Optional
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _dump_leaf(path: Path, arr: np.ndarray):
     buf = io.BytesIO()
     np.save(buf, arr, allow_pickle=False)
-    path.write_bytes(zstandard.ZstdCompressor(level=3).compress(buf.getvalue()))
+    if zstandard is not None:
+        path.write_bytes(zstandard.ZstdCompressor(level=3).compress(buf.getvalue()))
+    else:
+        path.write_bytes(zlib.compress(buf.getvalue(), 3))
 
 
 def _load_leaf(path: Path) -> np.ndarray:
-    raw = zstandard.ZstdDecompressor().decompress(path.read_bytes(),
-                                                  max_output_size=1 << 38)
+    blob = path.read_bytes()
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(f"{path} is zstd-compressed but zstandard is "
+                               "not installed")
+        raw = zstandard.ZstdDecompressor().decompress(blob, max_output_size=1 << 38)
+    else:
+        raw = zlib.decompress(blob)
     return np.load(io.BytesIO(raw), allow_pickle=False)
 
 

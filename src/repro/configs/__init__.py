@@ -19,6 +19,7 @@ from repro.configs.base import (
     ModelConfig,
     MoECfg,
     RetrievalCfg,
+    ServingCfg,
     ShapeCfg,
     XLSTMCfg,
     cell_supported,
@@ -105,6 +106,7 @@ __all__ = [
     "ModelConfig",
     "MoECfg",
     "RetrievalCfg",
+    "ServingCfg",
     "ShapeCfg",
     "XLSTMCfg",
     "cell_supported",

@@ -94,6 +94,41 @@ class AttentionRuntime:
             object.__setattr__(self, "retrieval", RetrievalCfg())
 
 
+@dataclass(frozen=True)
+class ServingCfg:
+    """Continuous-batching serving layer (serving/scheduler.py + engine.py).
+
+    The physical arena is ``num_pages`` pages of ``page_size`` tokens per
+    attention layer (page 0 reserved as the null page); each request slot may
+    map at most ``max_blocks_per_slot`` logical pages (its context ceiling).
+    Watermarks are FREE-page fractions of the base arena: below ``low`` new
+    admissions are assigned the compressed tier, below ``critical`` the
+    longest running dense request is escalated in place (dense -> T2; pages
+    freed back to the dense pool). Escalation needs ``enable_escalation`` and
+    a base mode of "dense"."""
+
+    num_slots: int = 4
+    page_size: int = 16
+    num_pages: int = 129           # incl. the reserved null page 0
+    max_blocks_per_slot: int = 16
+    escalated_pages: int = 65      # CPQ arena pages (tiered engines only)
+    low_watermark: float = 0.25
+    critical_watermark: float = 0.10
+    enable_escalation: bool = False
+    prefill_bucket: int = 16       # prompts padded up to a multiple of this
+
+    def __post_init__(self):
+        assert self.num_pages >= 2 and self.escalated_pages >= 2
+        assert self.page_size >= 1 and self.num_slots >= 1
+        assert 0.0 <= self.critical_watermark <= self.low_watermark <= 1.0
+        assert self.prefill_bucket >= 1
+
+    @property
+    def max_len(self) -> int:
+        """Per-request logical context ceiling (tokens)."""
+        return self.page_size * self.max_blocks_per_slot
+
+
 # ------------------------------------------------------------------- model
 
 

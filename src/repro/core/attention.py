@@ -25,6 +25,8 @@ from repro.core.decomposed_attention import decomposed_attention
 
 NEG_INF = -1e30
 
+length_mask = kvc.length_mask  # canonical (B|1, N) written-slot mask
+
 
 # ------------------------------------------------------------------- dense
 
@@ -36,7 +38,7 @@ def dense_attention(
     scale: float,
     causal: bool = True,
     q_offset: jax.Array | int = 0,   # absolute position of q[0] (decode)
-    kv_length: Optional[jax.Array] = None,  # () valid kv tokens (cache arenas)
+    kv_length: Optional[jax.Array] = None,  # () or (B,) valid kv tokens (cache arenas)
     logit_bias: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Reference GQA scaled dot-product attention (pure jnp oracle)."""
@@ -50,13 +52,13 @@ def dense_attention(
         s = s + logit_bias
 
     pos_j = jnp.arange(S, dtype=jnp.int32)
-    ok = jnp.ones((T, S), bool)
+    ok = jnp.ones((1, T, S), bool)
     if causal:
         pos_i = jnp.arange(T, dtype=jnp.int32) + q_offset
-        ok = pos_j[None, :] <= pos_i[:, None]
+        ok = ok & (pos_j[None, :] <= pos_i[:, None])[None]
     if kv_length is not None:
-        ok = ok & (pos_j[None, :] < kv_length)
-    s = jnp.where(ok[None, :, None, :], s, NEG_INF)
+        ok = ok & length_mask(kv_length, S)[:, None, :]
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     wg = w.reshape(B, T, KV, g, S).astype(v.dtype)
     # output head dim follows V (MLA has Dv != Dq)
@@ -104,7 +106,9 @@ def cpq_chunked_decode_attention(q, kt, vt, length, scale: float,
         k_hat = dequant(ck, lvk, kt.scale, kt.zero)            # (B,c,KV,Dh)
         s = jnp.einsum("bkgd,bckd->bkgc", qg, k_hat) * scale
         pos = base + jnp.arange(c, dtype=jnp.int32)
-        s = jnp.where((pos < length)[None, None, None, :], s, NEG_INF)
+        # length is () (contiguous arena) or (B,) (paged per-row lengths)
+        msk = pos[None, :] < jnp.reshape(length, (-1, 1))      # (B|1, c)
+        s = jnp.where(msk[:, None, None, :], s, NEG_INF)
         m2 = jnp.maximum(m, jnp.max(s, axis=-1))
         corr = jnp.exp(m - m2)
         p = jnp.exp(s - m2[..., None])
@@ -179,7 +183,8 @@ def decomposed_cpq_chunked_decode(q_nope, q_rope, xt, k_rope, w_k_nope, w_v,
             ).reshape(B, H, c)
         s = s * scale
         pos = base + jnp.arange(c, dtype=jnp.int32)
-        s = jnp.where((pos < length)[None, None, :], s, NEG_INF)
+        msk = pos[None, :] < jnp.reshape(length, (-1, 1))      # (B|1, c)
+        s = jnp.where(msk[:, None, :], s, NEG_INF)
         m2 = jnp.maximum(m, jnp.max(s, axis=-1))
         corr = jnp.exp(m - m2)
         w = jnp.exp(s - m2[..., None])

@@ -129,14 +129,24 @@ def cpq_compress_prefill(x: jax.Array, cfg: CPQCfg, n_max: int) -> CPQTensor:
 # ---------------------------------------------------------------- decode path
 
 
-def cpq_append_decode(t: CPQTensor, x_t: jax.Array, pos: jax.Array, cfg: CPQCfg) -> CPQTensor:
-    """HQE append of one token. x_t: (B, 1, H, D); pos: () int32 write slot.
+def cpq_encode_token(scale: jax.Array, zero: jax.Array, num_levels: jax.Array,
+                     prune_thr: jax.Array, x_t: jax.Array, cfg: CPQCfg):
+    """HQE-encode one decode token per row WITHOUT touching the code arena.
+
+    The per-row HQE math shared by the contiguous append (below) and the
+    paged-arena append (serving/paged_cache.py), which scatter the returned
+    code through different layouts. Inputs are the per-sequence side state:
+    scale/zero (B, L, H, D), num_levels (B, H), prune_thr (B, H, D);
+    x_t: (B, 1, H, D).
 
     Each token is quantized exactly once: if, for a head, any channel of the
     (pruned) token falls outside the tolerance range of that head's current
     level, a new level is spawned whose range is the union of the old range
     and the token's values (range extension), and the token is encoded with
     the new parameters. Otherwise the current level is reused.
+
+    Returns (code_t (B,1,H,D) int8, level_t (B,H) int32, scale', zero',
+    num_levels').
     """
     B, one, H, D = x_t.shape
     assert one == 1
@@ -146,12 +156,12 @@ def cpq_append_decode(t: CPQTensor, x_t: jax.Array, pos: jax.Array, cfg: CPQCfg)
 
     # (1) prune with the prefill-fitted per-channel thresholds (decode-stage
     #     pruning, as the paper extends pruning beyond prefill)
-    mask = jnp.abs(xf) >= t.prune_thr  # (B, H, D)
+    mask = jnp.abs(xf) >= prune_thr  # (B, H, D)
 
-    cur = t.num_levels - 1  # (B, H) current level index
+    cur = num_levels - 1  # (B, H) current level index
     take = lambda a: jnp.take_along_axis(a, cur[:, None, :, None], axis=1)[:, 0]  # noqa: E731
-    s_cur = take(t.scale)  # (B, H, D)
-    z_cur = take(t.zero)
+    s_cur = take(scale)  # (B, H, D)
+    z_cur = take(zero)
     lo_cur, hi_cur = z_cur, z_cur + s_cur * steps
 
     # (2) tolerance-range check over surviving channels (per head)
@@ -161,7 +171,7 @@ def cpq_append_decode(t: CPQTensor, x_t: jax.Array, pos: jax.Array, cfg: CPQCfg)
     hi_tr = hi_cur + (tol - 1.0) * width
     outside = mask & ((xf < lo_tr) | (xf > hi_tr))
     spawn = jnp.any(outside, axis=-1)  # (B, H)
-    can_spawn = t.num_levels < cfg.max_levels
+    can_spawn = num_levels < cfg.max_levels
     spawn = spawn & can_spawn
 
     # (3) new-level parameters: union of current range and the token
@@ -169,25 +179,30 @@ def cpq_append_decode(t: CPQTensor, x_t: jax.Array, pos: jax.Array, cfg: CPQCfg)
     hi_new = jnp.maximum(hi_cur, jnp.where(mask, xf, hi_cur))
     s_new = jnp.maximum((hi_new - lo_new) / jnp.maximum(steps, 1), 1e-8)
 
-    new_idx = jnp.where(spawn, t.num_levels, cur)  # (B, H)
+    new_idx = jnp.where(spawn, num_levels, cur)  # (B, H)
     put = lambda arr, val: jnp.where(  # noqa: E731
         (jnp.arange(arr.shape[1], dtype=jnp.int32)[None, :, None, None]
          == new_idx[:, None, :, None]) & spawn[:, None, :, None],
         val[:, None],
         arr,
     )
-    scale = put(t.scale, s_new)
-    zero = put(t.zero, lo_new)
+    scale2 = put(scale, s_new)
+    zero2 = put(zero, lo_new)
 
     s_use = jnp.where(spawn[..., None], s_new, s_cur)
     z_use = jnp.where(spawn[..., None], lo_new, z_cur)
     code_t = _encode(x_t, mask[:, None], s_use[:, None], z_use[:, None], bits)  # (B,1,H,D)
+    num_levels2 = num_levels + spawn.astype(jnp.int32)
+    return code_t, new_idx.astype(jnp.int32), scale2, zero2, num_levels2
 
+
+def cpq_append_decode(t: CPQTensor, x_t: jax.Array, pos: jax.Array, cfg: CPQCfg) -> CPQTensor:
+    """HQE append of one token to the contiguous arena. x_t: (B, 1, H, D);
+    pos: () int32 write slot. See ``cpq_encode_token`` for the HQE math."""
+    code_t, level_t, scale, zero, num_levels = cpq_encode_token(
+        t.scale, t.zero, t.num_levels, t.prune_thr, x_t, cfg)
     codes = jax.lax.dynamic_update_slice_in_dim(t.codes, code_t, pos, axis=1)
-    level = jax.lax.dynamic_update_slice_in_dim(
-        t.level, new_idx[:, None, :].astype(jnp.int32), pos, axis=1
-    )
-    num_levels = t.num_levels + spawn.astype(jnp.int32)
+    level = jax.lax.dynamic_update_slice_in_dim(t.level, level_t[:, None], pos, axis=1)
     return CPQTensor(codes, scale, zero, level, num_levels, t.prune_thr)
 
 

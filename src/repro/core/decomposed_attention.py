@@ -26,6 +26,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.kv_cache import length_mask
 from repro.distributed.sharding import constrain
 
 NEG_INF = -1e30
@@ -79,7 +80,7 @@ def decomposed_attention(
     k_rope: jax.Array,      # (B, N, KV, R) roped key slice
     w_k_nope: jax.Array,    # (Dm, KV, Dn)
     w_v: jax.Array,         # (Dm, KV, Dh)
-    length: jax.Array,      # () int32 valid tokens
+    length: jax.Array,      # () or (B,) int32 valid tokens
     scale: float,
     query_positions: jax.Array | None = None,  # (T,) absolute positions for causal mask
 ) -> jax.Array:
@@ -105,10 +106,11 @@ def decomposed_attention(
     s = s.astype(jnp.float32) * scale
 
     pos_j = jnp.arange(N, dtype=jnp.int32)
-    ok = (pos_j[None, :] < length)  # (1, N): written slots
+    # (B|1, 1, N): written slots — length is () or per-row (B,) (paged serving)
+    ok = length_mask(length, N)[:, None, :]
     if query_positions is not None:
-        ok = ok & (pos_j[None, :] <= query_positions[:, None])  # (T, N) causal
-    s = jnp.where(ok[None, :, None, :], s, NEG_INF)
+        ok = ok & (pos_j[None, :] <= query_positions[:, None])[None]  # (T, N) causal
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)
 
     w = jax.nn.softmax(s, axis=-1).astype(x_cache.dtype)
     return decomposed_values(w, x_cache, w_v)

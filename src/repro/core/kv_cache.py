@@ -71,6 +71,13 @@ def valid_mask(length: jax.Array, n_max: int) -> jax.Array:
     return jnp.arange(n_max, dtype=jnp.int32) < length
 
 
+def length_mask(length: jax.Array, n: int) -> jax.Array:
+    """(B|1, N) bool mask of written cache slots. ``length`` is () for the
+    single-sequence arenas or (B,) for per-row paged serving lengths."""
+    pos_j = jnp.arange(n, dtype=jnp.int32)
+    return pos_j[None, :] < jnp.reshape(length, (-1, 1))
+
+
 def append_tokens(arena: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
     """Write ``new`` (B, T, ...) into ``arena`` (B, N, ...) at token slot pos."""
     return jax.lax.dynamic_update_slice_in_dim(arena, new.astype(arena.dtype), pos, axis=1)
@@ -135,9 +142,12 @@ def init_cpq_x(batch: int, n_max: int, dm: int, kv: int, rope_dims: int,
     )
 
 
-def bytes_per_token(cache: Cache) -> float:
-    """Off-chip traffic per cached token (payload view; see cpq_bytes_per_token
-    for the CPQ accounting)."""
+def bytes_per_token(cache: Cache, cpq_cfg: Optional[CPQCfg] = None) -> float:
+    """Off-chip traffic per cached token — ONE accounting API for every
+    container. CPQ modes route through ``cpq_lib.cpq_bytes_per_token`` (the
+    serving watermark policy depends on every tier reporting through here);
+    pass the runtime's ``CPQCfg`` for exact bits/prune accounting, else the
+    default CPQCfg is assumed."""
     if isinstance(cache, DenseKVCache):
         return 2.0 * cache.k.shape[2] * cache.k.shape[3] * cache.k.dtype.itemsize
     if isinstance(cache, XCache):
@@ -146,4 +156,13 @@ def bytes_per_token(cache: Cache) -> float:
     if isinstance(cache, RetrievalCache):
         return (2.0 * cache.k.shape[2] * cache.k.shape[3] * cache.k.dtype.itemsize
                 + cache.proxy.shape[2] * cache.proxy.shape[3])
+    if isinstance(cache, CPQKVCache):
+        cfg = cpq_cfg or CPQCfg()
+        h, d = cache.k.codes.shape[2], cache.k.codes.shape[3]
+        return 2.0 * cpq_lib.cpq_bytes_per_token(cfg, h, d)
+    if isinstance(cache, CPQXCache):
+        cfg = cpq_cfg or CPQCfg()
+        dm = cache.x.codes.shape[3]
+        rope = cache.k_rope.shape[2] * cache.k_rope.shape[3] * cache.k_rope.dtype.itemsize
+        return cpq_lib.cpq_bytes_per_token(cfg, 1, dm) + rope
     raise TypeError(type(cache))

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RetrievalCfg
+from repro.core.kv_cache import length_mask
 
 NEG_INF = -1e30
 
@@ -70,7 +71,7 @@ def proxy_scores(q: jax.Array, codes: jax.Array, scale: jax.Array, zero: jax.Arr
 
 def select_topk(
     s_proxy: jax.Array,    # (B, T, H, N) proxy scores
-    length: jax.Array,     # () valid tokens
+    length: jax.Array,     # () or (B,) valid tokens
     cfg: RetrievalCfg,
     query_positions: jax.Array | None = None,
 ) -> jax.Array:
@@ -81,14 +82,16 @@ def select_topk(
     calibration well-conditioned)."""
     N = s_proxy.shape[-1]
     pos_j = jnp.arange(N, dtype=jnp.int32)
-    ok = pos_j[None, :] < length
+    len_col = jnp.reshape(length, (-1, 1))                      # (B|1, 1)
+    ok = length_mask(length, N)[:, None, :]                     # (B|1, 1, N)
     if query_positions is not None:
-        ok = ok & (pos_j[None, :] <= query_positions[:, None])
-    s = jnp.where(ok[None, :, None, :], s_proxy, NEG_INF)
-    recent = pos_j[None, :] >= (length - cfg.recent_window)
+        ok = ok & (pos_j[None, :] <= query_positions[:, None])[None]
+    s = jnp.where(ok[:, :, None, :], s_proxy, NEG_INF)
+    recent = (pos_j[None, :] >= (len_col - cfg.recent_window))[:, None, :]
     if query_positions is not None:
-        recent = pos_j[None, :] >= (query_positions[:, None] - cfg.recent_window + 1)
-    s = jnp.where((recent & ok)[None, :, None, :], jnp.float32(1e20), s)
+        recent = (pos_j[None, :]
+                  >= (query_positions[:, None] - cfg.recent_window + 1))[None]
+    s = jnp.where((recent & ok)[:, :, None, :], jnp.float32(1e20), s)
     k = min(cfg.top_k, N)
     _, idx = jax.lax.top_k(s, k)
     return idx.astype(jnp.int32)
@@ -139,7 +142,7 @@ def retrieval_attention(
 
     s = jnp.einsum("bthd,bthkd->bthk", q, k_sel).astype(jnp.float32) * scale
     # mask candidates that duplicated an invalid slot (length < K edge case)
-    ok = idx < length
+    ok = idx < jnp.reshape(length, (-1, 1, 1, 1))               # () or (B,) length
     if query_positions is not None:
         ok = ok & (idx <= query_positions[None, :, None, None])
     s = jnp.where(ok, s, NEG_INF)
@@ -149,10 +152,10 @@ def retrieval_attention(
         # proxy-estimated fraction of total softmax mass captured by the
         # selected set -> rescale so dropped tail is accounted for.
         pos_j = jnp.arange(sp.shape[-1], dtype=jnp.int32)
-        okn = pos_j[None, :] < length
+        okn = length_mask(length, sp.shape[-1])[:, None, :]
         if query_positions is not None:
-            okn = okn & (pos_j[None, :] <= query_positions[:, None])
-        spm = jnp.where(okn[None, :, None, :], sp, NEG_INF)
+            okn = okn & (pos_j[None, :] <= query_positions[:, None])[None]
+        spm = jnp.where(okn[:, :, None, :], sp, NEG_INF)
         m = jnp.max(spm, axis=-1, keepdims=True)
         denom_all = jnp.sum(jnp.exp(spm - m), axis=-1)
         sp_sel = jnp.take_along_axis(spm, idx, axis=-1)

@@ -32,6 +32,9 @@ def main(argv=None):
     ap.add_argument("--new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching engine over paged arenas "
+                         "(token prompts only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -47,7 +50,19 @@ def main(argv=None):
     batch.pop("labels")
     batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
 
-    eng = ServeEngine(cfg, params, max_len=args.prompt + args.new)
+    if args.continuous:
+        from repro.configs import ServingCfg
+        from repro.serving import ContinuousServeEngine
+        from repro.serving.paged_cache import pages_needed
+
+        n_max = args.prompt + args.new
+        serving = ServingCfg(
+            num_slots=args.batch, page_size=16,
+            num_pages=args.batch * pages_needed(n_max, 16) + 1,
+            max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16)
+        eng = ContinuousServeEngine(cfg, params, serving=serving)
+    else:
+        eng = ServeEngine(cfg, params, max_len=args.prompt + args.new)
     gen = GenerationConfig(max_new_tokens=args.new, temperature=args.temperature,
                            seed=args.seed)
     t0 = time.time()

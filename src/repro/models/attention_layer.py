@@ -19,12 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.param import ParamDef
-from repro.configs.base import AttentionRuntime, ModelConfig
+from repro.configs.base import AttentionRuntime, CPQCfg, ModelConfig
 from repro.core import attention as core_attn
 from repro.core import kv_cache as kvc
 from repro.core.flash_ref import attention_auto
 from repro.distributed.sharding import constrain
-from repro.models.layers import apply_rope, rms_norm_vec, rope_tables
+from repro.models.layers import apply_rope, apply_rope_rows, rms_norm_vec, rope_tables
 
 
 def decoupled_rope_dims(cfg: ModelConfig) -> int:
@@ -95,6 +95,22 @@ def _rope_qk(cfg: ModelConfig, q, k, positions_q, positions_k, dims: int | None 
     ck, sk = rope_tables(positions_k, d, cfg.rope_theta)
     q = q.at[..., :d].set(apply_rope(q[..., :d], cq, sq)) if d < q.shape[-1] else apply_rope(q, cq, sq)
     k = k.at[..., :d].set(apply_rope(k[..., :d], ck, sk)) if d < k.shape[-1] else apply_rope(k, ck, sk)
+    return q, k
+
+
+def _rope_qk_rows(cfg: ModelConfig, q, k, positions, dims: int | None = None):
+    """Per-row decode rope: positions (B,), q/k (B, 1, H|KV, D) — every
+    request row sits at its own position (continuous batching)."""
+    if cfg.pos_embedding != "rope":
+        return q, k
+    d = q.shape[-1] if dims is None else dims
+    if d == 0:
+        return q, k
+    cos, sin = rope_tables(positions, d, cfg.rope_theta)  # (B, d/2)
+    q = (q.at[..., :d].set(apply_rope_rows(q[..., :d], cos, sin))
+         if d < q.shape[-1] else apply_rope_rows(q, cos, sin))
+    k = (k.at[..., :d].set(apply_rope_rows(k[..., :d], cos, sin))
+         if d < k.shape[-1] else apply_rope_rows(k, cos, sin))
     return q, k
 
 
@@ -192,6 +208,69 @@ def attn_decode(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
         q, k = _rope_qk(cfg, q, k, positions_t, positions_t)
         out, cache = core_attn.decode_attend(
             rt, cache, q=q, k_t=k, v_t=v, x_t=None, k_rope_t=None,
+            q_nope=None, q_rope=None, w_k_nope=None, w_v=None, scale=_scale(cfg))
+    return _out(cfg, p, out), cache
+
+
+def init_paged_attn_cache(cfg: ModelConfig, rt: AttentionRuntime, serving,
+                          tiered: bool = False):
+    """Per-layer paged arena for the configured mode (serving/paged_cache.py).
+    ``tiered`` adds the CPQ escalation arena next to the dense base arena."""
+    from repro.serving import paged_cache as pgc
+
+    kw = dict(kv=cfg.num_kv_heads, dh=cfg.head_dim)
+    if tiered:
+        assert rt.mode == "dense", "tier escalation starts from a dense base"
+        return pgc.TieredPagedCache(
+            dense=pgc.init_paged_dense(serving.num_pages, serving.page_size,
+                                       dtype=cfg.param_dtype, **kw),
+            cpq=pgc.init_paged_cpq(serving.escalated_pages, serving.page_size,
+                                   serving.num_slots, cfg.num_kv_heads,
+                                   cfg.head_dim, rt.cpq or CPQCfg()))
+    if rt.mode == "dense":
+        return pgc.init_paged_dense(serving.num_pages, serving.page_size,
+                                    dtype=cfg.param_dtype, **kw)
+    if rt.mode == "decomposed":
+        return pgc.init_paged_x(serving.num_pages, serving.page_size, cfg.d_model,
+                                cfg.num_kv_heads, decoupled_rope_dims(cfg),
+                                cfg.param_dtype)
+    if rt.mode == "cpq":
+        return pgc.init_paged_cpq(serving.num_pages, serving.page_size,
+                                  serving.num_slots, cfg.num_kv_heads,
+                                  cfg.head_dim, rt.cpq)
+    if rt.mode == "decomposed_cpq":
+        return pgc.init_paged_cpq_x(serving.num_pages, serving.page_size,
+                                    serving.num_slots, cfg.d_model,
+                                    cfg.num_kv_heads, decoupled_rope_dims(cfg),
+                                    rt.cpq, cfg.param_dtype)
+    if rt.mode == "retrieval":
+        return pgc.init_paged_retrieval(serving.num_pages, serving.page_size,
+                                        serving.num_slots, cfg.num_kv_heads,
+                                        cfg.head_dim, rt.retrieval, cfg.param_dtype)
+    raise ValueError(rt.mode)
+
+
+def attn_decode_rows(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
+                     rows, cache):
+    """One-token decode against a paged arena. x_t: (B, 1, D) normed block
+    input; ``rows`` is a serving.paged_cache.RowState (per-row positions =
+    rows.lengths)."""
+    from repro.serving import paged_cache as pgc
+
+    q, k, v = _project_qkv(cfg, p, x_t)
+    r = decoupled_rope_dims(cfg)
+
+    if rt.mode in ("decomposed", "decomposed_cpq"):
+        q, k = _rope_qk_rows(cfg, q, k, rows.lengths, dims=r)
+        wk_nope, wv, _ = _wk_wv_heads(cfg, p)
+        out, cache = pgc.decode_attend_paged(
+            rt, cache, rows, q=q, k_t=k, v_t=v, x_t=x_t, k_rope_t=k[..., :r],
+            q_nope=q[..., r:], q_rope=q[..., :r], w_k_nope=wk_nope, w_v=wv,
+            scale=_scale(cfg))
+    else:
+        q, k = _rope_qk_rows(cfg, q, k, rows.lengths)
+        out, cache = pgc.decode_attend_paged(
+            rt, cache, rows, q=q, k_t=k, v_t=v, x_t=None, k_rope_t=None,
             q_nope=None, q_rope=None, w_k_nope=None, w_v=None, scale=_scale(cfg))
     return _out(cfg, p, out), cache
 

@@ -64,6 +64,17 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
     return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
 
 
+def apply_rope_rows(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Per-row rope for one-token decode: x: (B, 1, H, D); cos/sin: (B, D/2)
+    built from per-row positions (continuous-batching serving, where every
+    request sits at its own position)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[:, None, None, :].astype(x.dtype)
+    s = sin[:, None, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
 def sinusoidal_embedding(positions: jax.Array, dim: int) -> jax.Array:
     """Absolute sinusoidal position embeddings (musicgen/opt): (T, dim)."""
     half = dim // 2
@@ -134,7 +145,11 @@ def embed_inputs(cfg: ModelConfig, p, batch: dict, positions: jax.Array) -> jax.
     if cfg.embed_scale:
         x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
     if cfg.pos_embedding == "absolute":
-        x = x + sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)[None]
+        if positions.ndim == 2:  # per-row positions (B, T): continuous batching
+            emb = sinusoidal_embedding(positions.reshape(-1), cfg.d_model)
+            x = x + emb.reshape(*positions.shape, cfg.d_model).astype(x.dtype)
+        else:
+            x = x + sinusoidal_embedding(positions, cfg.d_model).astype(x.dtype)[None]
     return constrain(x, "act_batch", None, None)
 
 

@@ -29,7 +29,7 @@ from repro.core import kv_cache as kvc
 from repro.core.decomposed_attention import decomposed_attention
 from repro.core.flash_ref import attention_auto
 from repro.distributed.sharding import constrain
-from repro.models.layers import apply_rope, rope_tables
+from repro.models.layers import apply_rope, apply_rope_rows, rope_tables
 
 
 def _dims(cfg: ModelConfig):
@@ -152,5 +152,60 @@ def mla_decode(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
 
     o = decomposed_attention(
         q_nope, q_rope, c_arena, cache.k_rope,
+        w_k_nope=p["wuk"], w_v=p["wuv"], length=new_len, scale=_scale(cfg))
+    return _out(cfg, p, o), cache
+
+
+def init_paged_mla_cache(cfg: ModelConfig, rt: AttentionRuntime, serving):
+    """Paged latent arena: X pages hold c_kv, k_rope pages the shared roped
+    head (serving/paged_cache.py)."""
+    from repro.serving import paged_cache as pgc
+
+    L, _, Dr, _ = _dims(cfg)
+    if rt.mode == "cpq":
+        return pgc.init_paged_cpq_x(serving.num_pages, serving.page_size,
+                                    serving.num_slots, L, 1, Dr, rt.cpq,
+                                    cfg.param_dtype)
+    return pgc.init_paged_x(serving.num_pages, serving.page_size, L, 1, Dr,
+                            cfg.param_dtype)
+
+
+def _q_ckv_rows(cfg: ModelConfig, p, x_t: jax.Array, positions: jax.Array):
+    """Per-row-position variant of _q_ckv for one-token continuous decode."""
+    B, T, _ = x_t.shape
+    H = cfg.num_heads
+    L, Dn, Dr, Dv = _dims(cfg)
+    q = (x_t @ p["wq"]).reshape(B, T, H, Dn + Dr)
+    q = constrain(q, "act_batch", None, "act_heads", None)
+    q_nope, q_rope = q[..., :Dn], q[..., Dn:]
+    kv = x_t @ p["wdkv"]
+    c = _rms(kv[..., :L], p["kv_norm"])
+    k_rope = kv[..., None, L:]  # (B, 1, 1, Dr)
+    cos, sin = rope_tables(positions, Dr, cfg.rope_theta)  # (B, Dr/2)
+    return q_nope, apply_rope_rows(q_rope, cos, sin), c, \
+        apply_rope_rows(k_rope, cos, sin)
+
+
+def mla_decode_rows(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
+                    rows, cache):
+    """Absorbed decode over a paged latent arena with per-row positions."""
+    from repro.serving import paged_cache as pgc
+
+    q_nope, q_rope, c_t, k_rope_t = _q_ckv_rows(cfg, p, x_t, rows.lengths)
+    new_len = rows.lengths + rows.active.astype(jnp.int32)
+
+    if isinstance(cache, pgc.PagedCPQXCache):
+        cache = pgc.PagedCPQXCache(
+            x=pgc.append_cpq_tensor(cache.x, rows, c_t[:, :, None, :], rt.cpq),
+            k_rope=pgc.write_token_pages(cache.k_rope, rows.block_table,
+                                         rows.lengths, rows.active, k_rope_t[:, 0]))
+        xt = pgc.logical_cpq(cache.x, rows.block_table)
+        c_arena = cpq_lib.cpq_dequant(xt, x_t.dtype)[:, :, 0, :]
+    else:
+        cache = pgc.append_x(cache, rows, c_t, k_rope_t)
+        c_arena = pgc.gather_pages(cache.x, rows.block_table)
+
+    o = decomposed_attention(
+        q_nope, q_rope, c_arena, pgc.gather_pages(cache.k_rope, rows.block_table),
         w_k_nope=p["wuk"], w_v=p["wuv"], length=new_len, scale=_scale(cfg))
     return _out(cfg, p, o), cache

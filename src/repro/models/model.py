@@ -14,9 +14,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.param import abstract_tree, init_tree, spec_tree
-from repro.configs.base import AttentionRuntime, ModelConfig
+from repro.configs.base import AttentionRuntime, CPQCfg, ModelConfig
+from repro.core import kv_cache as kvc
 from repro.models import transformer as tfm
+from repro.serving import paged_cache as pgc
 from repro.models.layers import embed_defs, embed_inputs, lm_logits, norm_defs, apply_norm
+
+
+@jax.custom_jvp
+def _barrier(tree):
+    """Differentiable ``optimization_barrier``: some JAX versions ship no JVP
+    rule for the primitive, which broke every train-path test. Primal keeps
+    the barrier (the scan/LICM pinning it exists for); tangents pass through."""
+    return jax.lax.optimization_barrier(tree)
+
+
+@_barrier.defjvp
+def _barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return _barrier(x), t
 
 
 # --------------------------------------------------------------------- defs
@@ -78,7 +94,7 @@ def forward_train(cfg: ModelConfig, params, batch: dict, remat: bool = True):
             # SPMD partitioner all-gathers the WHOLE stacked (num_blocks, ...)
             # FSDP weights and LICM hoists them out of the scan (measured
             # +43GB/device on jamba train — EXPERIMENTS.md §Perf)
-            block_params = jax.lax.optimization_barrier(block_params)
+            block_params = _barrier(block_params)
             a_blk = jnp.zeros((), jnp.float32)
             for f, p in zip(layer_fns, block_params):
                 x, a = f(x, p)
@@ -126,8 +142,11 @@ def init_caches(cfg: ModelConfig, rt: AttentionRuntime, batch: int, n_max: int):
     return {"prefix": prefix, "blocks": blocks}
 
 
-def prefill(cfg: ModelConfig, rt: AttentionRuntime, params, batch: dict, caches):
-    """Process the prompt; returns (last-position logits (B,V), caches)."""
+def prefill(cfg: ModelConfig, rt: AttentionRuntime, params, batch: dict, caches,
+            last_index: Optional[jax.Array] = None):
+    """Process the prompt; returns (logits (B,V), caches). Logits come from
+    the last position, or from ``last_index`` (shared () int32) when the
+    prompt is right-padded to a jit bucket (continuous-batching admission)."""
     S = (batch["tokens"] if "tokens" in batch else batch["frames"]).shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)
     x = embed_inputs(cfg, params["embed"], batch, positions)
@@ -141,7 +160,7 @@ def prefill(cfg: ModelConfig, rt: AttentionRuntime, params, batch: dict, caches)
     new_blocks = caches["blocks"]
     if cfg.num_blocks:
         def body(x, inp):
-            block_params, block_caches = jax.lax.optimization_barrier(inp)
+            block_params, block_caches = _barrier(inp)
             outs = []
             for kind, p, c in zip(cfg.block_pattern, block_params, block_caches):
                 x, c2 = tfm.layer_prefill(cfg, rt, kind, p, x, positions, patches, c)
@@ -152,7 +171,11 @@ def prefill(cfg: ModelConfig, rt: AttentionRuntime, params, batch: dict, caches)
             body, x, (tuple(params["blocks"]), tuple(caches["blocks"])))
         new_blocks = list(new_blocks)
 
-    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    if last_index is not None:
+        x = jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+    else:
+        x = x[:, -1:]
+    x = apply_norm(cfg, params["final_norm"], x)
     logits = lm_logits(cfg, params, x)[:, 0]
     return logits, {"prefix": new_prefix, "blocks": new_blocks}
 
@@ -171,7 +194,7 @@ def decode_step(cfg: ModelConfig, rt: AttentionRuntime, params, tokens: jax.Arra
     new_blocks = caches["blocks"]
     if cfg.num_blocks:
         def body(x, inp):
-            block_params, block_caches = jax.lax.optimization_barrier(inp)
+            block_params, block_caches = _barrier(inp)
             outs = []
             for kind, p, c in zip(cfg.block_pattern, block_params, block_caches):
                 x, c2 = tfm.layer_decode(cfg, rt, kind, p, x, pos, c)
@@ -185,3 +208,100 @@ def decode_step(cfg: ModelConfig, rt: AttentionRuntime, params, tokens: jax.Arra
     x = apply_norm(cfg, params["final_norm"], x)
     logits = lm_logits(cfg, params, x)[:, 0]
     return logits, {"prefix": new_prefix, "blocks": new_blocks}
+
+
+# -------------------------------------------------- continuous (paged) serving
+
+
+def init_paged_caches(cfg: ModelConfig, rt: AttentionRuntime, serving,
+                      tiered: bool = False):
+    """Paged cache pytree: one shared page pool per layer; slot-indexed
+    contiguous state for recurrent/xattn mixers. ``serving`` is a ServingCfg;
+    ``tiered`` adds the CPQ escalation arena (watermark policy)."""
+    prefix = [tfm.layer_paged_cache_init(cfg, rt, k, serving, tiered)
+              for k in cfg.prefix_pattern]
+
+    def stacked(kind):
+        one = tfm.layer_paged_cache_init(cfg, rt, kind, serving, tiered)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_blocks,) + a.shape).copy(), one)
+
+    blocks = [stacked(k) for k in cfg.block_pattern]
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def decode_step_rows(cfg: ModelConfig, rt: AttentionRuntime, params,
+                     tokens: jax.Array, rows: pgc.RowState, caches):
+    """One continuous-batching decode step: every row at its own position
+    (``rows.lengths``), caches gathered through the block table.
+    tokens: (B, 1) int32. Returns (logits (B, V), caches)."""
+    x = embed_inputs(cfg, params["embed"], {"tokens": tokens}, rows.lengths[:, None])
+
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c2 = tfm.layer_decode_rows(cfg, rt, kind, p, x, rows, c)
+        new_prefix.append(c2)
+
+    new_blocks = caches["blocks"]
+    if cfg.num_blocks:
+        def body(x, inp):
+            block_params, block_caches = _barrier(inp)
+            outs = []
+            for kind, p, c in zip(cfg.block_pattern, block_params, block_caches):
+                x, c2 = tfm.layer_decode_rows(cfg, rt, kind, p, x, rows, c)
+                outs.append(c2)
+            return x, tuple(outs)
+
+        x, new_blocks = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(caches["blocks"])))
+        new_blocks = list(new_blocks)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}
+
+
+def pack_prefill_caches(cfg: ModelConfig, rt: AttentionRuntime, paged, src,
+                        block_row: jax.Array, slot: jax.Array):
+    """Scatter a freshly prefilled B=1 contiguous cache pytree (``src``, from
+    ``prefill``) into slot ``slot`` of the paged cache pytree (admission)."""
+    def pack_layer(kind, pc, sc):
+        mixer, _ = kind
+        if mixer in ("attn", "mla"):
+            return pgc.pack_into(rt.mode, pc, sc, block_row, slot)
+        if mixer == "xattn":  # static per-request K/V, slot-indexed
+            return kvc.DenseKVCache(pc.k.at[slot].set(sc.k[0]),
+                                    pc.v.at[slot].set(sc.v[0]), sc.length)
+        # recurrent state: all leaves are (B, ...)
+        return jax.tree.map(lambda d, s: d.at[slot].set(s[0]), pc, sc)
+
+    prefix = [pack_layer(k, pc, sc)
+              for k, pc, sc in zip(cfg.prefix_pattern, paged["prefix"], src["prefix"])]
+    blocks = [jax.vmap(lambda c, s, kind=kind: pack_layer(kind, c, s))(pc, sc)
+              for kind, pc, sc in zip(cfg.block_pattern, paged["blocks"], src["blocks"])]
+    return {"prefix": prefix, "blocks": blocks}
+
+
+def escalate_slot(cfg: ModelConfig, rt: AttentionRuntime, caches,
+                  dense_row: jax.Array, cpq_row: jax.Array, slot: jax.Array,
+                  length: jax.Array):
+    """Watermark-policy tier escalation: re-compress slot ``slot``'s dense K/V
+    into the CPQ arena across every tiered attention layer (the paper's
+    "dynamically compress" lever, applied mid-request). The host frees the
+    dense pages afterwards; ``dense_row`` is the slot's pre-escalation dense
+    block row, ``cpq_row`` its freshly allocated CPQ block row."""
+    cpq_cfg = rt.cpq or CPQCfg()
+
+    def esc_layer(kind, c):
+        mixer, _ = kind
+        if mixer != "attn" or not isinstance(c, pgc.TieredPagedCache):
+            return c
+        src = pgc.compress_dense_slot(
+            pgc.gather_pages(c.dense.k, dense_row[None]),
+            pgc.gather_pages(c.dense.v, dense_row[None]), length, cpq_cfg)
+        return c._replace(cpq=pgc.pack_cpq(c.cpq, src, cpq_row, slot))
+
+    prefix = [esc_layer(k, c) for k, c in zip(cfg.prefix_pattern, caches["prefix"])]
+    blocks = [jax.vmap(lambda c, kind=kind: esc_layer(kind, c))(pc)
+              for kind, pc in zip(cfg.block_pattern, caches["blocks"])]
+    return {"prefix": prefix, "blocks": blocks}

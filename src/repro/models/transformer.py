@@ -113,6 +113,45 @@ def layer_cache_init(cfg: ModelConfig, rt: AttentionRuntime, kind: tuple[str, st
     raise ValueError(mixer)
 
 
+def layer_paged_cache_init(cfg: ModelConfig, rt: AttentionRuntime,
+                           kind: tuple[str, str], serving, tiered: bool):
+    """Paged arena for attention mixers; slot-indexed contiguous state for
+    everything else (recurrent state is O(1)/request, xattn K/V is static
+    per request — neither needs paging)."""
+    mixer, _ = kind
+    if mixer == "attn":
+        return attn.init_paged_attn_cache(cfg, rt, serving, tiered)
+    if mixer == "mla":
+        return mla_lib.init_paged_mla_cache(cfg, rt, serving)
+    return layer_cache_init(cfg, rt, kind, serving.num_slots,
+                            serving.max_len, cfg.num_patch_tokens)
+
+
+def layer_decode_rows(cfg: ModelConfig, rt: AttentionRuntime, kind: tuple[str, str],
+                      p, x_t: jax.Array, rows, cache):
+    """Continuous-batching decode: per-row positions/lengths via ``rows``
+    (serving.paged_cache.RowState). Non-attention mixers are position-free and
+    reuse their contiguous decode; retired slots' garbage state is overwritten
+    at the next admission."""
+    mixer, mlp = kind
+    h = apply_norm(cfg, p["norm1"], x_t)
+    if mixer == "attn":
+        y, cache = attn.attn_decode_rows(cfg, rt, p["mixer"], h, rows, cache)
+    elif mixer == "xattn":
+        y, cache = attn.xattn_decode(cfg, p["mixer"], h, cache)
+    elif mixer == "mla":
+        y, cache = mla_lib.mla_decode_rows(cfg, rt, p["mixer"], h, rows, cache)
+    elif mixer == "mamba":
+        y, cache = mamba_lib.mamba_decode(cfg, p["mixer"], h, cache)
+    elif mixer == "mlstm":
+        y, cache = xlstm_lib.mlstm_decode(cfg, p["mixer"], h, cache)
+    elif mixer == "slstm":
+        y, cache = xlstm_lib.slstm_decode(cfg, p["mixer"], h, cache)
+    x_t = x_t + y
+    x_t, _ = _apply_mlp_part(cfg, mlp, p, x_t)
+    return x_t, cache
+
+
 def layer_prefill(cfg: ModelConfig, rt: AttentionRuntime, kind: tuple[str, str], p,
                   x: jax.Array, positions: jax.Array, patches: Optional[jax.Array],
                   cache):

@@ -1,1 +1,27 @@
-from repro.serving.engine import GenerationConfig, ServeEngine  # noqa: F401
+"""Serving subsystem: paged KV-cache arenas + continuous-batching engine.
+
+Modules:
+  paged_cache — block-paged arenas for the five cache tiers (leaf module;
+                imported by models/* for the paged decode path)
+  scheduler   — host-side admission queue, slot table, watermark policy
+  engine      — ServeEngine (static batch) + ContinuousServeEngine
+
+Engine symbols are re-exported lazily (PEP 562) so importing
+``repro.serving.paged_cache`` from the model stack does not recurse through
+the engine -> model import chain.
+"""
+
+_ENGINE_EXPORTS = ("GenerationConfig", "ServeEngine", "ContinuousServeEngine")
+_SCHEDULER_EXPORTS = ("Request", "Scheduler", "SchedulerConfigError")
+
+__all__ = list(_ENGINE_EXPORTS + _SCHEDULER_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro.serving import engine
+        return getattr(engine, name)
+    if name in _SCHEDULER_EXPORTS:
+        from repro.serving import scheduler
+        return getattr(scheduler, name)
+    raise AttributeError(name)

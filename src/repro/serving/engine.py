@@ -1,16 +1,25 @@
-"""Batched serving engine: prefill -> decode loop with sampling, EOS
-handling, and mode-selectable caches (dense / T1 decomposed / T2 CPQ /
-T3 retrieval). The paper's end-to-end inference path.
+"""Serving engines: the paper's end-to-end inference path.
 
-Static-shape design (TPU-friendly): the request batch is padded to a fixed
-size; prompts are right-padded to a common length (per-row lengths masked at
-sampling); the decode loop is one jitted step reused every token. Cache
-traffic per token is the mode's bytes/token (see kv_cache.bytes_per_token and
-benchmarks/bench_e2e_energy.py for the traffic model).
+Two engines share the sampling / generation config machinery:
+
+``ServeEngine`` — the original static-batch engine (kept as the back-compat
+baseline and as the benchmark foil): one right-padded batch runs prefill then
+a jitted decode loop to completion; every row owns a contiguous
+``(n_max, ...)`` arena slice for the whole run.
+
+``ContinuousServeEngine`` — continuous batching over block-paged arenas
+(serving/paged_cache.py) driven by the host-side scheduler
+(serving/scheduler.py): requests are admitted into vacated slots as soon as
+pages are free, every row decodes at its own position (one jitted step over
+per-row lengths), rows retire at EOS and free their pages immediately, and
+the memory watermark policy escalates cache tiers (dense -> T2 CPQ) under
+pressure — the paper's "dynamically compress and prune" story operationalized
+at the request level.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Optional
 
@@ -18,8 +27,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import AttentionRuntime, ModelConfig
+from repro.configs.base import AttentionRuntime, CPQCfg, ModelConfig, ServingCfg
 from repro.models import model as M
+from repro.serving import paged_cache as pgc
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfigError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +42,28 @@ class GenerationConfig:
     seed: int = 0
 
 
+def sample_tokens(logits: jax.Array, key, gen: GenerationConfig) -> jax.Array:
+    """(B, V) logits -> (B,) int32 samples (greedy / temperature / top-p)."""
+    if gen.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / gen.temperature
+    if gen.top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        k = jnp.sum(cum < gen.top_p, axis=-1, keepdims=True)
+        thresh = jnp.take_along_axis(sorted_l, k, axis=-1)
+        logits = jnp.where(logits < thresh, -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- static engine
+
+
 class ServeEngine:
+    """Static-batch engine: fixed batch, right-padded prompts, run to
+    completion. Kept as the contiguous-arena baseline."""
+
     def __init__(self, cfg: ModelConfig, params, rt: Optional[AttentionRuntime] = None,
                  max_len: int = 4096):
         self.cfg = cfg
@@ -42,17 +74,7 @@ class ServeEngine:
         self._decode = jax.jit(partial(M.decode_step, cfg, self.rt))
 
     def _sample(self, logits: jax.Array, key, gen: GenerationConfig) -> jax.Array:
-        if gen.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        logits = logits / gen.temperature
-        if gen.top_p < 1.0:
-            sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
-            probs = jax.nn.softmax(sorted_l, axis=-1)
-            cum = jnp.cumsum(probs, axis=-1)
-            k = jnp.sum(cum < gen.top_p, axis=-1, keepdims=True)
-            thresh = jnp.take_along_axis(sorted_l, k, axis=-1)
-            logits = jnp.where(logits < thresh, -1e30, logits)
-        return jax.random.categorical(key, logits).astype(jnp.int32)
+        return sample_tokens(logits, key, gen)
 
     def generate(self, batch: dict, gen: GenerationConfig = GenerationConfig()):
         """batch: {'tokens': (B, S)} (+frames/patches per input_kind).
@@ -69,21 +91,318 @@ class ServeEngine:
         key = jax.random.PRNGKey(gen.seed)
         toks = []
         done = jnp.zeros((B,), bool)
+        live_tokens = 0
+        decode_calls = 0
         tok = self._sample(logits, key, gen)
         for t in range(gen.max_new_tokens):
+            if gen.eos_id >= 0:
+                # rows past their EOS emit eos_id, not fresh samples
+                tok = jnp.where(done, gen.eos_id, tok)
             toks.append(np.asarray(tok))
+            live_tokens += int(jnp.sum(~done))  # EOS itself counts; padding doesn't
             if gen.eos_id >= 0:
                 done = done | (tok == gen.eos_id)
                 if bool(jnp.all(done)):
                     break
+            if t == gen.max_new_tokens - 1:
+                break  # the last appended token needs no further decode
             key, sub = jax.random.split(key)
             logits, caches = self._decode(self.params, tok[:, None],
                                           jnp.asarray(S + t, jnp.int32), caches)
+            decode_calls += 1
             tok = self._sample(logits, sub, gen)
         out = np.stack(toks, axis=1)
         stats = {
             "prompt_tokens": int(B * S),
-            "generated_tokens": int(out.size),
+            "generated_tokens": live_tokens,
+            "decode_steps": decode_calls,
             "cache_mode": self.rt.mode,
         }
+        return out, stats
+
+
+# ----------------------------------------------------------- continuous engine
+
+
+class ContinuousServeEngine:
+    """Continuous batching over block-paged arenas.
+
+    One engine instance holds the jitted step functions; each ``serve`` call
+    builds a fresh scheduler + paged cache pytree and drains the request list.
+    The decode clock is the simulation time base: a request with
+    ``arrival=t`` becomes admissible after t decode steps (Poisson-arrival
+    benchmarks feed arrivals in these units; online use passes 0.0).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, rt: Optional[AttentionRuntime] = None,
+                 serving: ServingCfg = ServingCfg()):
+        self.cfg = cfg
+        self.params = params
+        self.serving = serving
+        rt = rt or cfg.attention
+        self.tiered = bool(serving.enable_escalation and rt.mode == "dense")
+        if self.tiered and rt.cpq is None:
+            rt = dataclasses.replace(rt, cpq=CPQCfg())
+        if self.tiered and any(m == "mla" for m, _ in cfg.layer_kinds):
+            raise SchedulerConfigError(
+                "tier escalation supports plain-attention stacks only "
+                "(MLA already caches the compressed latent)")
+        if cfg.input_kind != "tokens":
+            raise SchedulerConfigError(
+                "continuous serving drives token prompts; "
+                f"input_kind={cfg.input_kind!r} needs the static engine")
+        self.rt = rt
+        # recurrent mixers integrate every prefill token into their state, so
+        # bucket padding would pollute it (attention only masks); those archs
+        # prefill at exact lengths (more jit variants, exact math)
+        self._exact_prefill = any(m in ("mamba", "mlstm", "slstm")
+                                  for m, _ in cfg.layer_kinds)
+        self._decode = jax.jit(partial(M.decode_step_rows, cfg, rt))
+        self._pack = jax.jit(partial(M.pack_prefill_caches, cfg, rt))
+        self._escalate = jax.jit(partial(M.escalate_slot, cfg, rt))
+        self._prefills: dict[str, object] = {}
+        # cache-bearing layer count for the traffic model
+        self._n_cache_layers = sum(1 for m, _ in cfg.layer_kinds if m in ("attn", "mla"))
+
+    # ------------------------------------------------------------- helpers
+
+    def _rt_for_tier(self, tier: int) -> AttentionRuntime:
+        if tier == 0:
+            return self.rt
+        return AttentionRuntime(mode="cpq", cpq=self.rt.cpq)
+
+    def _prefill_for(self, rt: AttentionRuntime):
+        if rt.mode not in self._prefills:
+            self._prefills[rt.mode] = jax.jit(partial(M.prefill, self.cfg, rt))
+        return self._prefills[rt.mode]
+
+    def _bucketed(self, ctx: np.ndarray) -> tuple[np.ndarray, int]:
+        """Right-pad to the prefill bucket with the edge token (padding never
+        enters attention: causal mask + true-length logits index; cache slots
+        beyond the true length map to the null page)."""
+        S = len(ctx)
+        b = 1 if self._exact_prefill else self.serving.prefill_bucket
+        S_pad = max(b, -(-S // b) * b)
+        if S_pad == S:
+            return ctx, S
+        return np.concatenate([ctx, np.full((S_pad - S,), ctx[-1], np.int32)]), S
+
+    def _admit(self, req: Request, sched: Scheduler, caches, key, gen):
+        """B=1 prefill of the request's context, packed into its slot's pages;
+        samples the request's first token. Returns (caches, first_token)."""
+        padded, S = self._bucketed(req.context)
+        rt_t = self._rt_for_tier(req.tier)
+        ctg = M.init_caches(self.cfg, rt_t, 1, len(padded))
+        logits, ctg = self._prefill_for(rt_t)(
+            self.params, {"tokens": jnp.asarray(padded[None])}, ctg,
+            jnp.asarray(S - 1, jnp.int32))
+        tables = sched.alt_block_tables if req.tier == 1 else sched.block_tables
+        caches = self._pack(caches, ctg, jnp.asarray(tables[req.slot]),
+                            jnp.asarray(req.slot, jnp.int32))
+        tok = int(np.asarray(sample_tokens(logits, key, gen))[0])
+        return caches, tok
+
+    def _row_state(self, sched: Scheduler) -> pgc.RowState:
+        return pgc.RowState(
+            lengths=jnp.asarray(sched.lengths),
+            block_table=jnp.asarray(sched.block_tables),
+            active=jnp.asarray(sched.active_mask()),
+            tier=jnp.asarray(sched.tiers),
+            alt_block_table=(jnp.asarray(sched.alt_block_tables)
+                             if sched.tiered else None))
+
+    def _tier_bpt(self, caches) -> tuple[float, float]:
+        """(base, escalated) per-token decode traffic per cache-bearing layer."""
+        n_prefix = len(self.cfg.prefix_pattern)
+        entries = list(zip(self.cfg.prefix_pattern + self.cfg.block_pattern,
+                           caches["prefix"] + caches["blocks"]))
+        for i, (kind, c) in enumerate(entries):
+            if kind[0] not in ("attn", "mla"):
+                continue
+            c0 = jax.tree.map(lambda a: a[0], c) if i >= n_prefix else c
+            ps = self.serving.page_size
+            if isinstance(c0, pgc.TieredPagedCache):
+                return (pgc.bytes_per_token(c0.dense, ps),
+                        pgc.bytes_per_token(c0.cpq, ps, self.rt.cpq))
+            b = pgc.bytes_per_token(c0, ps, self.rt.cpq)
+            return b, b
+        return 0.0, 0.0
+
+    # ----------------------------------------------------------------- run
+
+    def serve(self, requests: list[Request],
+              gen: GenerationConfig = GenerationConfig()):
+        """Drain ``requests`` (admission-queue order = list order; arrivals in
+        decode-step units must be non-decreasing). Returns (results, stats):
+        results[rid] = {tokens, finish_reason, admitted_step, done_step, ...}.
+        """
+        sched = Scheduler(self.serving, self.tiered)
+        for r in sorted(requests, key=lambda r: r.arrival):
+            sched.submit(r)
+        caches = M.init_paged_caches(self.cfg, self.rt, self.serving, self.tiered)
+        bpt0, bpt1 = self._tier_bpt(caches)
+
+        B = self.serving.num_slots
+        last_tok = np.zeros((B,), np.int32)
+        key = jax.random.PRNGKey(gen.seed)
+        results: dict[int, dict] = {}
+        step = 0                     # decode-step clock
+        decode_steps = live_steps = 0
+        prefill_tokens = generated = 0
+        traffic = 0.0
+        util_peak, util_sum, util_n = 0.0, 0.0, 0
+        t0 = time.time()
+
+        def result_of(req: Request) -> dict:
+            return {
+                "tokens": np.asarray(req.generated, np.int32),
+                "finish_reason": req.finish_reason,
+                "arrival": req.arrival,
+                "admitted_step": req.admitted_step,
+                "first_token_step": req.first_token_step,
+                "done_step": req.done_step,
+                "preemptions": req.preemptions,
+                "escalated": req.escalated,
+            }
+
+        def finish(req: Request, reason: str):
+            sched.retire(req, step, reason)
+            results[req.rid] = result_of(req)
+
+        while sched.has_work():
+            # 1) admissions into vacated slots
+            while (req := sched.admit_next(now=step, step=step)) is not None:
+                key, sub = jax.random.split(key)
+                caches, tok = self._admit(req, sched, caches, sub, gen)
+                prefill_tokens += req.length
+                req.generated.append(tok)
+                generated += 1
+                last_tok[req.slot] = tok
+                if req.first_token_step < 0:
+                    req.first_token_step = step
+                if gen.eos_id >= 0 and tok == gen.eos_id:
+                    finish(req, "eos")
+                elif req.num_generated >= req.max_new_tokens:
+                    finish(req, "max_tokens")
+
+            # 2) watermark policy: escalate running dense requests under
+            #    critical memory pressure (dense -> T2, pages freed)
+            while (cand := sched.escalation_candidate()) is not None:
+                slot, length = cand.slot, cand.length
+                dense_row, cpq_row = sched.apply_escalation(cand)
+                caches = self._escalate(caches, jnp.asarray(dense_row),
+                                        jnp.asarray(cpq_row),
+                                        jnp.asarray(slot, jnp.int32),
+                                        jnp.asarray(length, jnp.int32))
+
+            # 3) growth: map a page for every running row's next write.
+            #    Out of pages: a dense grower first escalates itself to the
+            #    CPQ arena (frees its dense pages), else the youngest
+            #    same-arena request is preempted (recompute)
+            for req in sorted(sched.running(), key=lambda r: r.admitted_step):
+                if req.state != "running":
+                    continue
+                while not sched.ensure_writable(req):
+                    if req.length // self.serving.page_size >= \
+                            self.serving.max_blocks_per_slot:
+                        finish(req, "length_cap")
+                        break
+                    if self.tiered and req.tier == 0 and sched.cpq_alloc.can_alloc(
+                            pgc.pages_needed(req.length + 1,
+                                             self.serving.page_size)):
+                        slot, length = req.slot, req.length
+                        dense_row, cpq_row = sched.apply_escalation(req)
+                        caches = self._escalate(caches, jnp.asarray(dense_row),
+                                                jnp.asarray(cpq_row),
+                                                jnp.asarray(slot, jnp.int32),
+                                                jnp.asarray(length, jnp.int32))
+                        continue
+                    victim = sched.preemption_victim(exclude=req)
+                    if victim is None:
+                        finish(req, "oom")
+                        break
+                    sched.preempt(victim)
+
+            active = sched.active_mask()
+            if not active.any():
+                if sched.queue and sched.queue[0].arrival <= step:
+                    # empty machine and still unadmissible => can never fit
+                    req = sched.queue.popleft()
+                    req.state, req.done_step = "done", step
+                    req.finish_reason = "unschedulable"
+                    results[req.rid] = result_of(req)
+                    continue
+                # idle: jump the clock to the next arrival
+                if sched.queue:
+                    step = max(step + 1, int(np.ceil(sched.queue[0].arrival)))
+                continue
+
+            # 4) one jitted decode step over per-row positions
+            rows = self._row_state(sched)
+            logits, caches = self._decode(self.params, jnp.asarray(last_tok[:, None]),
+                                          rows, caches)
+            key, sub = jax.random.split(key)
+            toks = np.asarray(sample_tokens(logits, sub, gen))
+            decode_steps += 1
+            live_steps += int(active.sum())
+            tier_arr = sched.tiers
+            traffic += float(sum(
+                (sched.lengths[s] + 1.0) * (bpt1 if tier_arr[s] else bpt0)
+                for s in range(B) if active[s])) * self._n_cache_layers
+            util = sched.dense_alloc.utilization
+            util_peak = max(util_peak, util)
+            util_sum += util
+            util_n += 1
+            step += 1
+
+            for slot in range(B):
+                if not active[slot]:
+                    continue
+                req = sched.slots[slot]
+                t = int(toks[slot])
+                req.generated.append(t)
+                req.length += 1
+                sched.lengths[slot] += 1
+                last_tok[slot] = t
+                generated += 1
+                if gen.eos_id >= 0 and t == gen.eos_id:
+                    finish(req, "eos")
+                elif req.num_generated >= req.max_new_tokens:
+                    finish(req, "max_tokens")
+
+        wall = time.time() - t0
+        stats = {
+            "cache_mode": self.rt.mode,
+            "tiered": self.tiered,
+            "decode_steps": decode_steps,
+            "prefill_tokens": prefill_tokens,
+            "generated_tokens": generated,
+            "tokens_per_step": generated / max(decode_steps, 1),
+            "slot_utilization": live_steps / max(decode_steps * B, 1),
+            "arena_utilization_mean": util_sum / max(util_n, 1),
+            "arena_utilization_peak": util_peak,
+            "decode_traffic_bytes": traffic,
+            "bytes_per_token_layer": bpt0,
+            "wall_time_s": wall,
+            "tokens_per_s": generated / max(wall, 1e-9),
+            # invariant: every page freed once all requests retired
+            "dense_pages_leaked": sched.dense_alloc.num_used,
+            "cpq_pages_leaked": sched.cpq_alloc.num_used if sched.cpq_alloc else 0,
+            **sched.stats,
+        }
+        return results, stats
+
+    def generate(self, batch: dict, gen: GenerationConfig = GenerationConfig()):
+        """Static-engine-compatible convenience: one batch of equal-priority
+        requests; returns (tokens (B, max_new) right-padded with eos/last,
+        stats)."""
+        prompt = np.asarray(batch["tokens"])
+        reqs = [Request(rid=i, prompt=prompt[i], max_new_tokens=gen.max_new_tokens)
+                for i in range(prompt.shape[0])]
+        results, stats = self.serve(reqs, gen)
+        pad = gen.eos_id if gen.eos_id >= 0 else 0
+        out = np.full((prompt.shape[0], gen.max_new_tokens), pad, np.int32)
+        for i in range(prompt.shape[0]):
+            t = results[i]["tokens"]
+            out[i, :len(t)] = t[:gen.max_new_tokens]
         return out, stats

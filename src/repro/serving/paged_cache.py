@@ -1,0 +1,582 @@
+"""Block-paged KV-cache arenas for continuous-batching serving.
+
+The static containers in ``core/kv_cache.py`` dedicate a contiguous
+``(B, n_max, ...)`` arena to every request slot; a short request strands the
+rest of its row. Here the token axis is cut into fixed-size **pages** owned by
+a shared physical pool ``(P, page_size, ...)``, and a per-slot **block table**
+``(B, max_blocks)`` maps logical token blocks to physical pages (the vLLM
+construction, adapted to the paper's five cache tiers). The paper's motivating
+observation — "the KV cache can grow unpredictably and even surpass the
+model's weight size" — becomes an allocation problem: pages are allocated at
+admission/decode, freed at retirement, and the pool utilization drives the
+scheduler's watermark/tier-escalation policy.
+
+Layout invariants (shared by every paged container):
+
+  * Physical page 0 is the reserved **null page**: unmapped block-table
+    entries are 0 and the writes of inactive rows are routed there, so decode
+    steps stay branch-free under jit. Its contents are garbage by design.
+  * A slot's logical view is ``pages[block_table[b]]`` flattened to
+    ``(max_blocks * page_size, ...)``; slots beyond ``lengths[b]`` are masked
+    by every attention mode (core attention takes per-row ``(B,)`` lengths).
+  * Per-token state pages; per-SEQUENCE state (CPQ scale/zero/levels,
+    retrieval proxy calibration) stays slot-indexed ``(B, ...)`` — it is
+    O(1) per request and is overwritten at admission.
+
+Mode -> paged container (mirrors core/kv_cache.py):
+  dense      PagedDenseKVCache   K,V pages
+  decomposed PagedXCache         X pages (+ roped key pages)     (T1)
+  cpq        PagedCPQKVCache     CPQ code/level pages, slot stats (T2)
+  retrieval  PagedRetrievalCache K,V,proxy pages, slot calibration (T3)
+  cpq+decomp PagedCPQXCache      CPQ(X) pages (+ roped key pages) (T1+T2)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CPQCfg, RetrievalCfg
+from repro.core import cpq as cpq_lib
+from repro.core import kv_cache as kvc
+
+NULL_PAGE = 0
+
+
+class RowState(NamedTuple):
+    """Per-step request-row state threaded through the jitted decode step
+    (the paged analogue of the scalar ``pos`` argument)."""
+
+    lengths: jax.Array      # (B,) int32 — valid tokens per slot (= next position)
+    block_table: jax.Array  # (B, max_blocks) int32 physical page ids; 0 = unmapped
+    active: jax.Array       # (B,) bool — row decodes this step (writes commit)
+    tier: jax.Array         # (B,) int32 — 0 = base tier, 1 = escalated tier
+    alt_block_table: Optional[jax.Array] = None  # escalated-arena table (tiered)
+
+
+# -------------------------------------------------------------- page plumbing
+
+
+def gather_pages(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize logical views: (P, page, ...) x (B, max_blocks)
+    -> (B, max_blocks * page, ...). Unmapped blocks read the null page and
+    must be masked by lengths downstream."""
+    g = jnp.take(pages, block_table, axis=0)  # (B, max_blocks, page, ...)
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def write_token_pages(pages: jax.Array, block_table: jax.Array, lengths: jax.Array,
+                      active: jax.Array, val: jax.Array) -> jax.Array:
+    """Scatter one token per row at slot ``lengths[b]``. val: (B, ...) —
+    token payload per row. Inactive rows write the null page."""
+    page_size, max_blocks = pages.shape[1], block_table.shape[1]
+    blk = jnp.clip(lengths // page_size, 0, max_blocks - 1)
+    page_idx = jnp.take_along_axis(block_table, blk[:, None], axis=1)[:, 0]
+    page_idx = jnp.where(active, page_idx, NULL_PAGE)
+    off = lengths % page_size
+    return pages.at[page_idx, off].set(val.astype(pages.dtype))
+
+
+def write_prompt_pages(pages: jax.Array, block_row: jax.Array, val: jax.Array) -> jax.Array:
+    """Bulk-write a prompt into one slot's pages. block_row: (max_blocks,);
+    val: (S, ...). Positions whose block is unmapped or beyond max_blocks
+    (bucket padding past the slot's capacity) land on the null page — they
+    must never wrap around onto mapped pages."""
+    S, page_size = val.shape[0], pages.shape[1]
+    pos = jnp.arange(S, dtype=jnp.int32)
+    blk = pos // page_size
+    in_range = blk < block_row.shape[0]
+    pidx = jnp.where(in_range,
+                     block_row[jnp.clip(blk, 0, block_row.shape[0] - 1)],
+                     NULL_PAGE)
+    return pages.at[pidx, pos % page_size].set(val.astype(pages.dtype))
+
+
+def _sel_rows(active: jax.Array, new, old):
+    """Per-slot side-state commit: keep ``new`` on active rows only."""
+    return jax.tree.map(
+        lambda n, o: jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o),
+        new, old)
+
+
+# ----------------------------------------------------------------- allocator
+
+
+class PageAllocator:
+    """Host-side free-list over the physical pool (page 0 reserved as null).
+
+    The scheduler owns one per arena; alloc/free are O(n). ``OutOfPages`` is
+    the admission-control signal, not an error state."""
+
+    class OutOfPages(RuntimeError):
+        pass
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "need >= 1 allocatable page beyond the null page"
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))  # pop() hands out low ids first
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.num_used / max(self.num_pages - 1, 1)
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise self.OutOfPages(f"want {n} pages, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert p != NULL_PAGE, "freeing the null page"
+            assert p not in self._free, f"double free of page {p}"
+            self._free.append(int(p))
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    return -(-int(tokens) // page_size)
+
+
+def defrag_plan(block_table, num_pages: int):
+    """Compaction plan: remap every mapped page onto the lowest physical ids,
+    ordered by (slot, logical block) so each request's pages become physically
+    contiguous again after a churn of retirements (locality for the fused
+    kernels' sequential page reads).
+
+    ``block_table`` is a host array (B, max_blocks). Returns
+    (perm, new_block_table, free): ``perm[new_id] = old_id`` — apply to every
+    page-major pool with ``jnp.take(pages, perm, axis=0)`` — and ``free`` is
+    the rebuilt free list (same LIFO convention as PageAllocator)."""
+    import numpy as np
+
+    bt = np.asarray(block_table)
+    used: list[int] = []
+    seen = set()
+    for b in range(bt.shape[0]):
+        for j in range(bt.shape[1]):
+            p = int(bt[b, j])
+            if p != NULL_PAGE and p not in seen:
+                seen.add(p)
+                used.append(p)
+    perm = [NULL_PAGE] + used
+    in_front = set(perm)
+    perm += [p for p in range(num_pages) if p not in in_front]  # park stale pages
+    remap = {old: new for new, old in enumerate(perm)}  # total map; 0 -> 0
+    new_bt = np.array([[remap[int(p)] for p in row] for row in bt], dtype=bt.dtype)
+    free = list(range(num_pages - 1, len(used), -1))  # pop() hands out low ids
+    return np.asarray(perm, dtype=np.int32), new_bt, free
+
+
+# ------------------------------------------------------------- paged containers
+
+
+class PagedDenseKVCache(NamedTuple):
+    k: jax.Array  # (P, page, KV, Dh)
+    v: jax.Array  # (P, page, KV, Dh)
+
+
+class PagedXCache(NamedTuple):
+    x: jax.Array       # (P, page, Dm)
+    k_rope: jax.Array  # (P, page, KV, R)
+
+
+class PagedCPQTensor(NamedTuple):
+    """CPQ arena split into per-token pages + per-slot HQE side state."""
+
+    codes: jax.Array       # (P, page, H, D) int8
+    level: jax.Array       # (P, page, H) int32
+    scale: jax.Array       # (B, L, H, D) f32
+    zero: jax.Array        # (B, L, H, D) f32
+    num_levels: jax.Array  # (B, H) int32
+    prune_thr: jax.Array   # (B, H, D) f32
+
+
+class PagedCPQKVCache(NamedTuple):
+    k: PagedCPQTensor
+    v: PagedCPQTensor
+
+
+class PagedRetrievalCache(NamedTuple):
+    k: jax.Array            # (P, page, KV, Dh)
+    v: jax.Array            # (P, page, KV, Dh)
+    proxy: jax.Array        # (P, page, KV, Dp) int8
+    proxy_scale: jax.Array  # (B, KV, Dp) f32
+    proxy_zero: jax.Array   # (B, KV, Dp) f32
+
+
+class PagedCPQXCache(NamedTuple):
+    x: PagedCPQTensor       # H = 1, D = Dm
+    k_rope: jax.Array       # (P, page, KV, R)
+
+
+class TieredPagedCache(NamedTuple):
+    """Dense base arena + CPQ escalation arena; ``RowState.tier`` selects the
+    live one per row (the watermark policy's dense -> T2 migration target)."""
+
+    dense: PagedDenseKVCache
+    cpq: PagedCPQKVCache
+
+
+PagedCache = (PagedDenseKVCache | PagedXCache | PagedCPQKVCache
+              | PagedRetrievalCache | PagedCPQXCache | TieredPagedCache)
+
+
+# ------------------------------------------------------------- constructors
+
+
+def init_paged_dense(num_pages: int, page_size: int, kv: int, dh: int,
+                     dtype=jnp.bfloat16) -> PagedDenseKVCache:
+    z = jnp.zeros((num_pages, page_size, kv, dh), dtype)
+    return PagedDenseKVCache(z, z)
+
+
+def init_paged_x(num_pages: int, page_size: int, dm: int, kv: int, rope_dims: int,
+                 dtype=jnp.bfloat16) -> PagedXCache:
+    return PagedXCache(
+        x=jnp.zeros((num_pages, page_size, dm), dtype),
+        k_rope=jnp.zeros((num_pages, page_size, kv, rope_dims), dtype))
+
+
+def _init_paged_cpq_tensor(num_pages: int, page_size: int, num_slots: int,
+                           h: int, d: int, cfg: CPQCfg) -> PagedCPQTensor:
+    return PagedCPQTensor(
+        codes=jnp.zeros((num_pages, page_size, h, d), jnp.int8),
+        level=jnp.zeros((num_pages, page_size, h), jnp.int32),
+        scale=jnp.zeros((num_slots, cfg.max_levels, h, d), jnp.float32),
+        zero=jnp.zeros((num_slots, cfg.max_levels, h, d), jnp.float32),
+        num_levels=jnp.ones((num_slots, h), jnp.int32),
+        prune_thr=jnp.zeros((num_slots, h, d), jnp.float32))
+
+
+def init_paged_cpq(num_pages: int, page_size: int, num_slots: int, kv: int, dh: int,
+                   cfg: CPQCfg) -> PagedCPQKVCache:
+    return PagedCPQKVCache(
+        k=_init_paged_cpq_tensor(num_pages, page_size, num_slots, kv, dh, cfg),
+        v=_init_paged_cpq_tensor(num_pages, page_size, num_slots, kv, dh, cfg))
+
+
+def init_paged_retrieval(num_pages: int, page_size: int, num_slots: int, kv: int,
+                         dh: int, cfg: RetrievalCfg, dtype=jnp.bfloat16
+                         ) -> PagedRetrievalCache:
+    dp = cfg.proxy_dim or dh
+    z = jnp.zeros((num_pages, page_size, kv, dh), dtype)
+    return PagedRetrievalCache(
+        k=z, v=z,
+        proxy=jnp.zeros((num_pages, page_size, kv, dp), jnp.int8),
+        proxy_scale=jnp.ones((num_slots, kv, dp), jnp.float32),
+        proxy_zero=jnp.zeros((num_slots, kv, dp), jnp.float32))
+
+
+def init_paged_cpq_x(num_pages: int, page_size: int, num_slots: int, dm: int,
+                     kv: int, rope_dims: int, cfg: CPQCfg,
+                     dtype=jnp.bfloat16) -> PagedCPQXCache:
+    return PagedCPQXCache(
+        x=_init_paged_cpq_tensor(num_pages, page_size, num_slots, 1, dm, cfg),
+        k_rope=jnp.zeros((num_pages, page_size, kv, rope_dims), dtype))
+
+
+# ------------------------------------------------------------ logical views
+
+
+def logical_cpq(t: PagedCPQTensor, block_table: jax.Array) -> cpq_lib.CPQTensor:
+    """Contiguous CPQTensor view of a paged CPQ arena (codes gathered through
+    the block table; per-slot stats already contiguous). The chunked decode
+    kernels consume this with per-row lengths."""
+    return cpq_lib.CPQTensor(
+        codes=gather_pages(t.codes, block_table),
+        scale=t.scale, zero=t.zero,
+        level=gather_pages(t.level, block_table),
+        num_levels=t.num_levels, prune_thr=t.prune_thr)
+
+
+# -------------------------------------------------------------- decode append
+
+
+def append_dense(cache: PagedDenseKVCache, rows: RowState,
+                 k_t: jax.Array, v_t: jax.Array) -> PagedDenseKVCache:
+    """k_t/v_t: (B, 1, KV, Dh) new token per row."""
+    return PagedDenseKVCache(
+        k=write_token_pages(cache.k, rows.block_table, rows.lengths, rows.active, k_t[:, 0]),
+        v=write_token_pages(cache.v, rows.block_table, rows.lengths, rows.active, v_t[:, 0]))
+
+
+def append_x(cache: PagedXCache, rows: RowState,
+             x_t: jax.Array, k_rope_t: Optional[jax.Array]) -> PagedXCache:
+    return PagedXCache(
+        x=write_token_pages(cache.x, rows.block_table, rows.lengths, rows.active, x_t[:, 0]),
+        k_rope=(write_token_pages(cache.k_rope, rows.block_table, rows.lengths,
+                                  rows.active, k_rope_t[:, 0])
+                if k_rope_t is not None else cache.k_rope))
+
+
+def append_cpq_tensor(t: PagedCPQTensor, rows: RowState, x_t: jax.Array,
+                      cfg: CPQCfg) -> PagedCPQTensor:
+    """HQE-encode one token per row (shared math with the contiguous path)
+    and scatter code/level through the block table. Side-state updates only
+    commit on active rows."""
+    code_t, level_t, scale, zero, num_levels = cpq_lib.cpq_encode_token(
+        t.scale, t.zero, t.num_levels, t.prune_thr, x_t, cfg)
+    scale, zero, num_levels = _sel_rows(
+        rows.active, (scale, zero, num_levels), (t.scale, t.zero, t.num_levels))
+    return PagedCPQTensor(
+        codes=write_token_pages(t.codes, rows.block_table, rows.lengths,
+                                rows.active, code_t[:, 0]),
+        level=write_token_pages(t.level, rows.block_table, rows.lengths,
+                                rows.active, level_t),
+        scale=scale, zero=zero, num_levels=num_levels, prune_thr=t.prune_thr)
+
+
+# ------------------------------------------------------------- prefill pack
+
+
+def pack_dense(cache: PagedDenseKVCache, src: kvc.DenseKVCache,
+               block_row: jax.Array) -> PagedDenseKVCache:
+    """Scatter a freshly prefilled contiguous B=1 cache into one slot's pages."""
+    return PagedDenseKVCache(
+        k=write_prompt_pages(cache.k, block_row, src.k[0]),
+        v=write_prompt_pages(cache.v, block_row, src.v[0]))
+
+
+def pack_x(cache: PagedXCache, src: kvc.XCache, block_row: jax.Array) -> PagedXCache:
+    return PagedXCache(
+        x=write_prompt_pages(cache.x, block_row, src.x[0]),
+        k_rope=write_prompt_pages(cache.k_rope, block_row, src.k_rope[0]))
+
+
+def pack_cpq_tensor(t: PagedCPQTensor, src: cpq_lib.CPQTensor, block_row: jax.Array,
+                    slot: jax.Array) -> PagedCPQTensor:
+    return PagedCPQTensor(
+        codes=write_prompt_pages(t.codes, block_row, src.codes[0]),
+        level=write_prompt_pages(t.level, block_row, src.level[0]),
+        scale=t.scale.at[slot].set(src.scale[0]),
+        zero=t.zero.at[slot].set(src.zero[0]),
+        num_levels=t.num_levels.at[slot].set(src.num_levels[0]),
+        prune_thr=t.prune_thr.at[slot].set(src.prune_thr[0]))
+
+
+def pack_cpq(cache: PagedCPQKVCache, src: kvc.CPQKVCache, block_row: jax.Array,
+             slot: jax.Array) -> PagedCPQKVCache:
+    return PagedCPQKVCache(
+        k=pack_cpq_tensor(cache.k, src.k, block_row, slot),
+        v=pack_cpq_tensor(cache.v, src.v, block_row, slot))
+
+
+def pack_retrieval(cache: PagedRetrievalCache, src: kvc.RetrievalCache,
+                   block_row: jax.Array, slot: jax.Array) -> PagedRetrievalCache:
+    return PagedRetrievalCache(
+        k=write_prompt_pages(cache.k, block_row, src.k[0]),
+        v=write_prompt_pages(cache.v, block_row, src.v[0]),
+        proxy=write_prompt_pages(cache.proxy, block_row, src.proxy[0]),
+        proxy_scale=cache.proxy_scale.at[slot].set(src.proxy_scale[0]),
+        proxy_zero=cache.proxy_zero.at[slot].set(src.proxy_zero[0]))
+
+
+def pack_cpq_x(cache: PagedCPQXCache, src: kvc.CPQXCache, block_row: jax.Array,
+               slot: jax.Array) -> PagedCPQXCache:
+    return PagedCPQXCache(
+        x=pack_cpq_tensor(cache.x, src.x, block_row, slot),
+        k_rope=write_prompt_pages(cache.k_rope, block_row, src.k_rope[0]))
+
+
+def pack_into(rt_mode: str, cache, src, block_row: jax.Array, slot: jax.Array):
+    """Mode dispatch for admission packing (contiguous B=1 prefill -> pages)."""
+    if isinstance(cache, TieredPagedCache):
+        if isinstance(src, kvc.DenseKVCache):
+            return cache._replace(dense=pack_dense(cache.dense, src, block_row))
+        return cache._replace(cpq=pack_cpq(cache.cpq, src, block_row, slot))
+    if isinstance(cache, PagedDenseKVCache):
+        return pack_dense(cache, src, block_row)
+    if isinstance(cache, PagedXCache):
+        return pack_x(cache, src, block_row)
+    if isinstance(cache, PagedCPQKVCache):
+        return pack_cpq(cache, src, block_row, slot)
+    if isinstance(cache, PagedRetrievalCache):
+        return pack_retrieval(cache, src, block_row, slot)
+    if isinstance(cache, PagedCPQXCache):
+        return pack_cpq_x(cache, src, block_row, slot)
+    raise TypeError(type(cache))
+
+
+# ------------------------------------------------------------------- traffic
+
+
+def bytes_per_token(cache: PagedCache, page_size: int,
+                    cpq_cfg: Optional[CPQCfg] = None) -> float:
+    """Per-token decode traffic of the paged arena: the contiguous payload
+    accounting (kv_cache.bytes_per_token / cpq accounting) plus the amortized
+    block-table overhead (one int32 entry per page). Hooked by
+    benchmarks/bench_e2e_energy.py and the scheduler's watermark policy."""
+    overhead = 4.0 / page_size
+    if isinstance(cache, TieredPagedCache):  # base-tier accounting
+        return bytes_per_token(cache.dense, page_size, cpq_cfg)
+    if isinstance(cache, PagedDenseKVCache):
+        payload = 2.0 * cache.k.shape[2] * cache.k.shape[3] * cache.k.dtype.itemsize
+    elif isinstance(cache, PagedXCache):
+        payload = (cache.x.shape[2] * cache.x.dtype.itemsize
+                   + cache.k_rope.shape[2] * cache.k_rope.shape[3]
+                   * cache.k_rope.dtype.itemsize)
+    elif isinstance(cache, PagedCPQKVCache):
+        cfg = cpq_cfg or CPQCfg()
+        payload = 2.0 * cpq_lib.cpq_bytes_per_token(
+            cfg, cache.k.codes.shape[2], cache.k.codes.shape[3])
+    elif isinstance(cache, PagedRetrievalCache):
+        payload = (2.0 * cache.k.shape[2] * cache.k.shape[3] * cache.k.dtype.itemsize
+                   + cache.proxy.shape[2] * cache.proxy.shape[3])
+    elif isinstance(cache, PagedCPQXCache):
+        cfg = cpq_cfg or CPQCfg()
+        payload = (cpq_lib.cpq_bytes_per_token(cfg, 1, cache.x.codes.shape[3])
+                   + cache.k_rope.shape[2] * cache.k_rope.shape[3]
+                   * cache.k_rope.dtype.itemsize)
+    else:
+        raise TypeError(type(cache))
+    return payload + overhead
+
+
+def arena_bytes(cache: PagedCache) -> int:
+    """Total physical bytes of the paged arena (all pools + slot side state)."""
+    return int(sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache)))
+
+
+# ------------------------------------------------------------- decode attend
+
+
+def decode_attend_paged(
+    rt,
+    cache: PagedCache,
+    rows: RowState,
+    *,
+    q: jax.Array,                   # (B, 1, H, Dh) roped query
+    k_t: jax.Array,                 # (B, 1, KV, Dh) roped new key
+    v_t: jax.Array,                 # (B, 1, KV, Dh)
+    x_t: Optional[jax.Array],       # (B, 1, Dm)
+    k_rope_t: Optional[jax.Array],  # (B, 1, KV, R)
+    q_nope: Optional[jax.Array],    # (B, 1, H, Dn) content query (T1)
+    q_rope: Optional[jax.Array],    # (B, 1, H, R) roped query slice (T1)
+    w_k_nope: Optional[jax.Array],  # (Dm, KV, Dn) (T1)
+    w_v: Optional[jax.Array],       # (Dm, KV, Dh) (T1)
+    scale: float,
+) -> tuple[jax.Array, PagedCache]:
+    """Paged analogue of ``core.attention.decode_attend``: scatter one token
+    per row through the block table, then attend over the gathered logical
+    view with per-row lengths. Every row sits at its own position
+    (``rows.lengths``); inactive rows write the null page and their output is
+    garbage the engine never reads. Returns (out (B,1,H,Dv), new_cache)."""
+    from repro.configs.base import AttentionRuntime
+    from repro.core import attention as core_attn
+    from repro.core import retrieval_attention as ret_lib
+    from repro.core.decomposed_attention import decomposed_attention
+
+    new_len = rows.lengths + rows.active.astype(jnp.int32)
+
+    if isinstance(cache, TieredPagedCache):
+        # compute both tiers (each tier's appends masked to its own rows),
+        # select per row — one jitted step serves a mixed dense/T2 batch
+        rows_d = rows._replace(active=rows.active & (rows.tier == 0))
+        rows_c = rows._replace(active=rows.active & (rows.tier == 1),
+                               block_table=rows.alt_block_table)
+        rt_c = AttentionRuntime(mode="cpq", cpq=rt.cpq)
+        out_d, dense = decode_attend_paged(
+            rt, cache.dense, rows_d, q=q, k_t=k_t, v_t=v_t, x_t=x_t,
+            k_rope_t=k_rope_t, q_nope=q_nope, q_rope=q_rope,
+            w_k_nope=w_k_nope, w_v=w_v, scale=scale)
+        out_c, cpq = decode_attend_paged(
+            rt_c, cache.cpq, rows_c, q=q, k_t=k_t, v_t=v_t, x_t=x_t,
+            k_rope_t=k_rope_t, q_nope=q_nope, q_rope=q_rope,
+            w_k_nope=w_k_nope, w_v=w_v, scale=scale)
+        out = jnp.where((rows.tier == 1)[:, None, None, None], out_c, out_d)
+        return out, TieredPagedCache(dense, cpq)
+
+    if isinstance(cache, PagedDenseKVCache):
+        cache = append_dense(cache, rows, k_t, v_t)
+        out = core_attn.dense_attention(
+            q, gather_pages(cache.k, rows.block_table),
+            gather_pages(cache.v, rows.block_table),
+            scale, causal=False, kv_length=new_len)
+        return out, cache
+
+    if isinstance(cache, PagedXCache):
+        cache = append_x(cache, rows, x_t, k_rope_t)
+        out = decomposed_attention(
+            q_nope, q_rope, gather_pages(cache.x, rows.block_table),
+            gather_pages(cache.k_rope, rows.block_table),
+            w_k_nope, w_v, new_len, scale)
+        return out, cache
+
+    if isinstance(cache, PagedCPQKVCache):
+        cache = PagedCPQKVCache(
+            k=append_cpq_tensor(cache.k, rows, k_t, rt.cpq),
+            v=append_cpq_tensor(cache.v, rows, v_t, rt.cpq))
+        out = core_attn.cpq_chunked_decode_attention(
+            q, logical_cpq(cache.k, rows.block_table),
+            logical_cpq(cache.v, rows.block_table), new_len, scale)
+        return out, cache
+
+    if isinstance(cache, PagedRetrievalCache):
+        dp = rt.retrieval.proxy_dim or k_t.shape[-1]
+        code_t = ret_lib.encode_proxy(
+            k_t[..., :dp], cache.proxy_scale, cache.proxy_zero, rt.retrieval.proxy_bits)
+        cache = PagedRetrievalCache(
+            k=write_token_pages(cache.k, rows.block_table, rows.lengths,
+                                rows.active, k_t[:, 0]),
+            v=write_token_pages(cache.v, rows.block_table, rows.lengths,
+                                rows.active, v_t[:, 0]),
+            proxy=write_token_pages(cache.proxy, rows.block_table, rows.lengths,
+                                    rows.active, code_t[:, 0]),
+            proxy_scale=cache.proxy_scale, proxy_zero=cache.proxy_zero)
+        out = ret_lib.retrieval_attention(
+            q, gather_pages(cache.k, rows.block_table),
+            gather_pages(cache.v, rows.block_table),
+            gather_pages(cache.proxy, rows.block_table),
+            cache.proxy_scale, cache.proxy_zero, new_len, rt.retrieval, scale)
+        return out, cache
+
+    if isinstance(cache, PagedCPQXCache):
+        cache = PagedCPQXCache(
+            x=append_cpq_tensor(cache.x, rows, x_t[:, :, None, :], rt.cpq),
+            k_rope=(write_token_pages(cache.k_rope, rows.block_table, rows.lengths,
+                                      rows.active, k_rope_t[:, 0])
+                    if k_rope_t is not None else cache.k_rope))
+        out = core_attn.decomposed_cpq_chunked_decode(
+            q_nope, q_rope, logical_cpq(cache.x, rows.block_table),
+            gather_pages(cache.k_rope, rows.block_table),
+            w_k_nope, w_v, new_len, scale)
+        return out, cache
+
+    raise TypeError(type(cache))
+
+
+# ------------------------------------------------------- tier escalation (T2)
+
+
+def compress_dense_slot(k_log: jax.Array, v_log: jax.Array, length: jax.Array,
+                        cfg: CPQCfg) -> kvc.CPQKVCache:
+    """Re-compress one slot's gathered dense K/V into CPQ tensors — the
+    watermark policy's dense -> T2 migration. Only dense is escalatable
+    post-hoc: T1 needs the pre-projection operand X, which a dense cache
+    never stored; T2 compresses exactly what is cached.
+
+    k_log/v_log: (1, Npad, KV, Dh) logical views; slots beyond ``length`` are
+    replaced by the last valid token so the prefill statistics (prune
+    quantile, level-0 range) see only real data."""
+    pos = jnp.arange(k_log.shape[1], dtype=jnp.int32)
+    last = jnp.clip(length - 1, 0, k_log.shape[1] - 1)
+
+    def valid_only(a):
+        edge = jax.lax.dynamic_index_in_dim(a, last, axis=1)  # (1, 1, KV, Dh)
+        return jnp.where((pos < length)[None, :, None, None], a, edge)
+
+    kt = cpq_lib.cpq_compress_prefill(valid_only(k_log), cfg, k_log.shape[1])
+    vt = cpq_lib.cpq_compress_prefill(valid_only(v_log), cfg, v_log.shape[1])
+    return kvc.CPQKVCache(kt, vt, length)

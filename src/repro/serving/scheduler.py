@@ -1,0 +1,256 @@
+"""Host-side continuous-batching scheduler.
+
+Pure bookkeeping, no JAX: an admission queue, a slot table, per-arena page
+allocators, and the memory watermark policy. The engine (engine.py) consults
+it every step and turns its decisions into jitted cache operations.
+
+Request lifecycle:
+
+    queued --admit--> running --retire--> done
+                \\        | preempt (out of pages: recompute-style, vLLM)
+                 <--------+
+
+Watermark policy (free-page fraction of the DENSE base arena):
+
+  * ``free < low_watermark``       new admissions are assigned the compressed
+                                   tier (T2 CPQ arena) — the paper's
+                                   "dynamically compress" applied at entry.
+  * ``free < critical_watermark``  the longest running dense request is
+                                   escalated in place: its K/V pages are
+                                   re-compressed into the CPQ arena and the
+                                   dense pages freed (engine runs the jitted
+                                   ``model.escalate_slot``).
+
+Only dense -> T2 is escalatable post-hoc: T1 (decomposed) needs the
+pre-projection operand X, which a dense cache never stored; T2 compresses
+exactly what is cached. T1 tiers are chosen at engine construction instead.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ServingCfg
+from repro.serving.paged_cache import NULL_PAGE, PageAllocator, pages_needed
+
+
+class SchedulerConfigError(ValueError):
+    pass
+
+
+@dataclass
+class Request:
+    """One serving request. ``prompt`` is immutable; ``generated`` accumulates
+    across preemptions (re-admission prefills prompt + generated)."""
+
+    rid: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new_tokens: int
+    arrival: float = 0.0                    # decode-step time units
+    # -- scheduler-owned state --
+    state: str = "queued"                   # queued | running | done
+    slot: int = -1
+    tier: int = 0                           # 0 = base, 1 = escalated/compressed
+    pages: list = field(default_factory=list)
+    generated: list = field(default_factory=list)
+    length: int = 0                         # valid cache tokens
+    admitted_step: int = -1
+    first_token_step: int = -1
+    done_step: int = -1
+    finish_reason: str = ""
+    preemptions: int = 0
+    escalated: bool = False
+
+    @property
+    def context(self) -> np.ndarray:
+        """Tokens to prefill on (re-)admission."""
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)]).astype(np.int32)
+
+    @property
+    def num_generated(self) -> int:
+        return len(self.generated)
+
+
+class Scheduler:
+    def __init__(self, serving: ServingCfg, tiered: bool = False):
+        self.cfg = serving
+        self.tiered = tiered
+        if serving.max_len < 2:
+            raise SchedulerConfigError("max_len < 2")
+        self.dense_alloc = PageAllocator(serving.num_pages)
+        self.cpq_alloc = PageAllocator(serving.escalated_pages) if tiered else None
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * serving.num_slots
+        S, M = serving.num_slots, serving.max_blocks_per_slot
+        self.block_tables = np.zeros((S, M), np.int32)       # base arena
+        self.alt_block_tables = np.zeros((S, M), np.int32) if tiered else None
+        self.lengths = np.zeros((S,), np.int32)
+        self.tiers = np.zeros((S,), np.int32)
+        self.stats = {"admitted": 0, "retired": 0, "preemptions": 0,
+                      "escalations": 0, "peak_dense_pages": 0}
+
+    # ------------------------------------------------------------- queries
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    def running(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([r is not None for r in self.slots], bool)
+
+    def free_frac(self) -> float:
+        return self.dense_alloc.num_free / max(self.dense_alloc.num_pages - 1, 1)
+
+    def _arena(self, tier: int) -> PageAllocator:
+        return self.cpq_alloc if tier == 1 else self.dense_alloc
+
+    def _tables(self, tier: int) -> np.ndarray:
+        return self.alt_block_tables if tier == 1 else self.block_tables
+
+    # ----------------------------------------------------------- admission
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.cfg.max_len:
+            raise SchedulerConfigError(
+                f"request {req.rid}: prompt {len(req.prompt)} + "
+                f"max_new {req.max_new_tokens} exceeds max_len {self.cfg.max_len}")
+        req.state = "queued"
+        self.queue.append(req)
+
+    def admit_next(self, now: float, step: int) -> Optional[Request]:
+        """Pop the next arrived request into a vacated slot if its prompt's
+        pages fit its tier arena. FIFO: the head must be admissible (no
+        head-of-line bypass — keeps per-request latency fair)."""
+        if not self.queue or self.queue[0].arrival > now:
+            return None
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return None
+        req = self.queue[0]
+        tier = 0
+        if self.tiered and self.free_frac() < self.cfg.low_watermark:
+            tier = 1  # memory pressure: admit compressed
+        arena = self._arena(tier)
+        need = pages_needed(len(req.context), self.cfg.page_size)
+        if not arena.can_alloc(need):
+            if tier == 0 and self.tiered:
+                tier, arena = 1, self.cpq_alloc  # dense full; try compressed
+                if not arena.can_alloc(need):
+                    return None
+            else:
+                return None
+        self.queue.popleft()
+        req.pages = arena.alloc(need)
+        req.state, req.slot, req.tier = "running", slot, tier
+        req.length = len(req.context)
+        if req.admitted_step < 0:
+            req.admitted_step = step
+        self.slots[slot] = req
+        tables = self._tables(tier)
+        tables[slot, :] = NULL_PAGE
+        tables[slot, :need] = req.pages
+        if self.tiered:
+            self._tables(1 - tier)[slot, :] = NULL_PAGE
+        self.lengths[slot] = req.length
+        self.tiers[slot] = tier
+        self.stats["admitted"] += 1
+        self.stats["peak_dense_pages"] = max(self.stats["peak_dense_pages"],
+                                             self.dense_alloc.num_used)
+        return req
+
+    # -------------------------------------------------------------- growth
+
+    def ensure_writable(self, req: Request) -> bool:
+        """Map a page for the next token write (position ``req.length``).
+        False => the tier arena is out of pages (caller preempts/escalates)."""
+        blk = req.length // self.cfg.page_size
+        if blk >= self.cfg.max_blocks_per_slot:
+            return False  # context ceiling — caller retires
+        tables = self._tables(req.tier)
+        if tables[req.slot, blk] != NULL_PAGE:
+            return True
+        arena = self._arena(req.tier)
+        if not arena.can_alloc(1):
+            return False
+        page = arena.alloc(1)
+        req.pages += page
+        tables[req.slot, blk] = page[0]
+        self.stats["peak_dense_pages"] = max(self.stats["peak_dense_pages"],
+                                             self.dense_alloc.num_used)
+        return True
+
+    # ---------------------------------------------------- retire / preempt
+
+    def _release(self, req: Request) -> None:
+        self._arena(req.tier).free(req.pages)
+        req.pages = []
+        slot = req.slot
+        self.block_tables[slot, :] = NULL_PAGE
+        if self.tiered:
+            self.alt_block_tables[slot, :] = NULL_PAGE
+        self.lengths[slot] = 0
+        self.tiers[slot] = 0
+        self.slots[slot] = None
+        req.slot = -1
+
+    def retire(self, req: Request, step: int, reason: str) -> None:
+        self._release(req)
+        req.state, req.done_step, req.finish_reason = "done", step, reason
+        req.tier = 0
+        self.stats["retired"] += 1
+
+    def preempt(self, req: Request) -> None:
+        """Recompute-style preemption: free everything, requeue at the FRONT
+        (its context re-prefills on the next admission)."""
+        self._release(req)
+        req.state, req.tier, req.length = "queued", 0, 0
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.queue.appendleft(req)
+
+    def preemption_victim(self, exclude: Request) -> Optional[Request]:
+        """Youngest running request whose pages live in the SAME arena the
+        blocked request allocates from — evicting a tier-1 victim cannot
+        unblock a dense-tier grower (and vice versa)."""
+        cands = [r for r in self.running()
+                 if r is not exclude and r.tier == exclude.tier]
+        return max(cands, key=lambda r: r.admitted_step, default=None)
+
+    # ---------------------------------------------------------- escalation
+
+    def escalation_candidate(self) -> Optional[Request]:
+        """Under critical pressure: the longest running dense request whose
+        compressed footprint fits the CPQ arena."""
+        if not self.tiered or self.free_frac() >= self.cfg.critical_watermark:
+            return None
+        cands = [r for r in self.running() if r.tier == 0]
+        for r in sorted(cands, key=lambda r: -r.length):
+            if self.cpq_alloc.can_alloc(pages_needed(r.length + 1, self.cfg.page_size)):
+                return r
+        return None
+
+    def apply_escalation(self, req: Request) -> tuple[np.ndarray, np.ndarray]:
+        """Move ``req``'s page ownership dense -> CPQ arena. Returns
+        (dense_row, cpq_row) block rows for the jitted re-compression (the
+        dense_row is the PRE-escalation mapping the gather reads)."""
+        assert self.tiered and req.tier == 0
+        slot = req.slot
+        dense_row = self.block_tables[slot].copy()
+        need = pages_needed(req.length + 1, self.cfg.page_size)
+        new_pages = self.cpq_alloc.alloc(need)
+        self.dense_alloc.free(req.pages)
+        req.pages = new_pages
+        req.tier, req.escalated = 1, True
+        self.tiers[slot] = 1
+        self.block_tables[slot, :] = NULL_PAGE
+        self.alt_block_tables[slot, :] = NULL_PAGE
+        self.alt_block_tables[slot, :need] = new_pages
+        self.stats["escalations"] += 1
+        return dense_row, self.alt_block_tables[slot].copy()

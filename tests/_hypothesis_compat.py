@@ -1,0 +1,51 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is a test-extra dependency (see pyproject.toml
+``[project.optional-dependencies] test``), not a runtime one. Importing it
+unconditionally made the whole suite fail at collection on environments
+without it. Property-based test modules import the library through this shim
+instead: when hypothesis is absent, ``@hypothesis.given(...)`` turns the test
+into a cleanly skipped stub (the same outcome as ``pytest.importorskip``, but
+scoped to the property tests so the deterministic tests in the same module
+still run).
+"""
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without the extra
+    HAVE_HYPOTHESIS = False
+
+    class _GivenShim:
+        """Stands in for the ``hypothesis`` module: ``given`` swallows the
+        test body and emits a skip stub; every other decorator is identity."""
+
+        def given(self, *_a, **_k):
+            def deco(f):
+                @pytest.mark.skip(reason="hypothesis not installed "
+                                         "(pip install '.[test]')")
+                def _skipped():
+                    pass
+
+                _skipped.__name__ = getattr(f, "__name__", "property_test")
+                return _skipped
+
+            return deco
+
+        def settings(self, *_a, **_k):
+            return lambda f: f
+
+        def assume(self, *_a, **_k):  # never reached from a skipped stub
+            return True
+
+    class _StShim:
+        """Strategy factories only feed ``given``; return inert placeholders."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    hypothesis = _GivenShim()
+    st = _StShim()

@@ -1,6 +1,5 @@
 """T2 CPQ + HQE property tests (paper §IV invariants)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # optional dep; see pyproject test extra
 import jax
 import jax.numpy as jnp
 import numpy as np

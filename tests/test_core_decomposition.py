@@ -1,6 +1,5 @@
 """T1 matrix decomposition: algebraic exactness properties (paper §III)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # optional dep; see pyproject test extra
 import jax
 import jax.numpy as jnp
 import numpy as np

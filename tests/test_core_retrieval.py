@@ -1,6 +1,5 @@
 """T3 retrieval attention properties (paper §V)."""
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # optional dep; see pyproject test extra
 import jax
 import jax.numpy as jnp
 import numpy as np

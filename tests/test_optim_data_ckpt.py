@@ -1,8 +1,7 @@
 """Optimizers, data pipeline determinism, checkpoint manager."""
 import tempfile
 
-import hypothesis
-import hypothesis.strategies as st
+from _hypothesis_compat import hypothesis, st  # optional dep; see pyproject test extra
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -77,7 +76,7 @@ from functools import partial
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.optim.compression import compressed_psum
-mesh = jax.make_mesh((8,), ('pod',), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((8,), ('pod',))
 key = jax.random.PRNGKey(0)
 x = jax.random.normal(key, (8, 128))  # row i = device i's gradient
 true_mean = jnp.mean(x, 0)
@@ -144,8 +143,8 @@ def test_checkpoint_elastic_reshard(run8):
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
-m1 = jax.make_mesh((2, 4), ('a', 'b'), axis_types=(jax.sharding.AxisType.Auto,)*2)
-m2 = jax.make_mesh((8,), ('c',), axis_types=(jax.sharding.AxisType.Auto,))
+m1 = jax.make_mesh((2, 4), ('a', 'b'))
+m2 = jax.make_mesh((8,), ('c',))
 x = jnp.arange(64.0).reshape(8, 8)
 xs = jax.device_put(x, NamedSharding(m1, P('a', 'b')))
 with tempfile.TemporaryDirectory() as d:

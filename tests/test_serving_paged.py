@@ -1,0 +1,222 @@
+"""Paged KV-cache arena tests: allocator/defrag invariants, page-plumbing
+round trips, paged-vs-contiguous decode equivalence across cache modes."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.configs.base import CPQCfg, RetrievalCfg
+from repro.core import kv_cache as kvc
+from repro.models import model as M
+from repro.serving import paged_cache as pgc
+from repro.serving.engine import ContinuousServeEngine, GenerationConfig, ServeEngine
+from repro.serving.scheduler import Request
+
+
+# ---------------------------------------------------------------- allocator
+
+
+def test_page_allocator_invariants():
+    a = pgc.PageAllocator(9)  # pages 1..8 allocatable
+    assert a.num_free == 8 and a.num_used == 0
+    p1 = a.alloc(3)
+    assert len(set(p1)) == 3 and pgc.NULL_PAGE not in p1
+    assert a.num_used == 3 and abs(a.utilization - 3 / 8) < 1e-9
+    with pytest.raises(pgc.PageAllocator.OutOfPages):
+        a.alloc(6)
+    a.free(p1[:2])
+    assert a.num_free == 7
+    with pytest.raises(AssertionError):  # double free
+        a.free([p1[0]])
+    with pytest.raises(AssertionError):  # null page is never owned
+        a.free([pgc.NULL_PAGE])
+
+
+def test_pages_needed():
+    assert pgc.pages_needed(0, 4) == 0
+    assert pgc.pages_needed(1, 4) == 1
+    assert pgc.pages_needed(4, 4) == 1
+    assert pgc.pages_needed(5, 4) == 2
+
+
+def test_defrag_compacts_and_preserves_views():
+    rng = np.random.default_rng(0)
+    num_pages, page, kv, dh = 17, 4, 2, 3
+    pages = jnp.asarray(rng.normal(size=(num_pages, page, kv, dh)).astype(np.float32))
+    # two slots with scattered pages
+    bt = np.zeros((2, 4), np.int32)
+    bt[0, :3] = [9, 2, 14]
+    bt[1, :2] = [7, 11]
+    before = np.asarray(pgc.gather_pages(pages, jnp.asarray(bt)))
+    perm, new_bt, free = pgc.defrag_plan(bt, num_pages)
+    new_pages = jnp.take(pages, jnp.asarray(perm), axis=0)
+    after = np.asarray(pgc.gather_pages(new_pages, jnp.asarray(new_bt)))
+    np.testing.assert_array_equal(before, after)
+    # compaction: mapped pages occupy the lowest non-null ids
+    mapped = sorted(p for p in new_bt.flatten() if p != pgc.NULL_PAGE)
+    assert mapped == list(range(1, 6))
+    assert set(free) == set(range(6, num_pages))
+
+
+# ------------------------------------------------------------ page plumbing
+
+
+def test_prompt_and_token_writes_roundtrip():
+    page, max_blocks = 4, 4
+    pages = jnp.zeros((9, page, 3))
+    block_row = jnp.asarray([2, 5, 0, 0], jnp.int32)  # 2 pages mapped
+    vals = jnp.arange(6 * 3, dtype=jnp.float32).reshape(6, 3)
+    pages = pgc.write_prompt_pages(pages, block_row, vals)
+    bt = jnp.asarray([[2, 5, 0, 0]], jnp.int32)
+    logical = pgc.gather_pages(pages, bt)[0]
+    np.testing.assert_array_equal(np.asarray(logical[:6]), np.asarray(vals))
+
+    # append one token at position 6 (same page as slots 4..7)
+    rows_active = jnp.asarray([True])
+    tok = jnp.full((1, 3), 7.0)
+    pages = pgc.write_token_pages(pages, bt, jnp.asarray([6]), rows_active, tok)
+    logical = pgc.gather_pages(pages, bt)[0]
+    np.testing.assert_array_equal(np.asarray(logical[6]), np.asarray(tok[0]))
+    # inactive rows write the null page, never their mapped pages (the
+    # logical view beyond the mapped blocks reads the null page and is
+    # masked by lengths downstream, so only the first 8 slots matter)
+    pages2 = pgc.write_token_pages(pages, bt, jnp.asarray([7]), jnp.asarray([False]),
+                                   jnp.full((1, 3), -1.0))
+    np.testing.assert_array_equal(np.asarray(pgc.gather_pages(pages2, bt)[0][:8]),
+                                  np.asarray(logical[:8]))
+
+
+def test_prompt_write_past_capacity_hits_null_page():
+    """Bucket padding beyond max_blocks*page must land on the null page, not
+    wrap around onto the slot's last mapped page (regression)."""
+    page = 4
+    pages = jnp.zeros((5, page, 2))
+    block_row = jnp.asarray([1, 2], jnp.int32)        # capacity 8 tokens
+    vals = jnp.ones((12, 2))                          # 4 tokens past capacity
+    pages = pgc.write_prompt_pages(pages, block_row, vals)
+    logical = pgc.gather_pages(pages, block_row[None])[0]
+    np.testing.assert_array_equal(np.asarray(logical[:8]), np.ones((8, 2)))
+    # overflow went to page 0, mapped pages untouched beyond their 8 slots
+    assert np.asarray(pages[0]).sum() > 0
+    np.testing.assert_array_equal(np.asarray(pages[3]), np.zeros((page, 2)))
+
+
+# ------------------------------------------------- decode-path equivalence
+
+
+def _mk(arch="qwen1.5-0.5b", mode=None):
+    cfg = smoke_config(ARCHS[arch])
+    if mode:
+        cfg = cfg.with_attention(mode)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _static_refs(cfg, params, prompts, gen):
+    eng = ServeEngine(cfg, params, max_len=64)
+    return [eng.generate({"tokens": jnp.asarray(p[None])}, gen)[0][0] for p in prompts]
+
+
+_PROMPT_LENS = (5, 12, 3, 9)
+
+
+def _prompts(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=s).astype(np.int32)
+            for s in _PROMPT_LENS]
+
+
+def test_paged_dense_greedy_equals_contiguous():
+    """The acceptance-criterion equivalence: mixed prompt lengths, greedy,
+    paged continuous decode == contiguous dense decode, token for token."""
+    cfg, params = _mk()
+    gen = GenerationConfig(max_new_tokens=6)
+    prompts = _prompts(cfg)
+    refs = _static_refs(cfg, params, prompts, gen)
+    serving = ServingCfg(num_slots=4, page_size=4, num_pages=41,
+                         max_blocks_per_slot=8, prefill_bucket=4)
+    eng = ContinuousServeEngine(cfg, params, serving=serving)
+    res, stats = eng.serve(
+        [Request(rid=i, prompt=p, max_new_tokens=6) for i, p in enumerate(prompts)],
+        gen)
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(res[i]["tokens"], ref)
+    assert stats["dense_pages_leaked"] == 0
+
+
+@pytest.mark.parametrize("arch,mode", [
+    ("opt-6.7b", "decomposed"),        # absolute positions: T1 exact
+    ("qwen1.5-0.5b", "decomposed"),    # rope: decoupled T1
+    ("qwen1.5-0.5b", "retrieval"),     # T3
+    ("deepseek-v2-lite-16b", "decomposed"),  # MLA latent cache
+    ("jamba-1.5-large-398b", None),    # hybrid: paged attn + slot SSM state
+    ("xlstm-125m", None),              # pure recurrent (exact prefill path)
+])
+def test_paged_modes_match_contiguous(arch, mode):
+    cfg, params = _mk(arch, mode)
+    gen = GenerationConfig(max_new_tokens=5)
+    prompts = _prompts(cfg, seed=1)
+    refs = _static_refs(cfg, params, prompts, gen)
+    serving = ServingCfg(num_slots=4, page_size=4, num_pages=65,
+                         max_blocks_per_slot=8, prefill_bucket=4)
+    eng = ContinuousServeEngine(cfg, params, serving=serving)
+    res, _ = eng.serve(
+        [Request(rid=i, prompt=p, max_new_tokens=5) for i, p in enumerate(prompts)],
+        gen)
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(res[i]["tokens"], ref)
+
+
+@pytest.mark.parametrize("mode", ["cpq", "decomposed_cpq"])
+def test_paged_cpq_modes_match_with_unbucketed_prefill(mode):
+    """CPQ prefill statistics are fitted over the (possibly padded) prompt, so
+    exact equality with the contiguous path needs prefill_bucket=1 (no
+    padding). Bucketed admission stays VALID, just not bit-identical."""
+    cfg, params = _mk(mode=mode)
+    gen = GenerationConfig(max_new_tokens=5)
+    prompts = _prompts(cfg, seed=2)
+    refs = _static_refs(cfg, params, prompts, gen)
+    serving = ServingCfg(num_slots=4, page_size=4, num_pages=65,
+                         max_blocks_per_slot=8, prefill_bucket=1)
+    eng = ContinuousServeEngine(cfg, params, serving=serving)
+    res, _ = eng.serve(
+        [Request(rid=i, prompt=p, max_new_tokens=5) for i, p in enumerate(prompts)],
+        gen)
+    for i, ref in enumerate(refs):
+        np.testing.assert_array_equal(res[i]["tokens"], ref)
+
+
+# ----------------------------------------------------------------- traffic
+
+
+def test_bytes_per_token_every_container():
+    """Satellite: every cache container reports traffic through ONE API —
+    including the CPQ modes that used to raise TypeError."""
+    cpq = CPQCfg()
+    dense = kvc.init_dense(1, 8, 2, 4)
+    x = kvc.init_x(1, 8, 16, 2, 4)
+    cq = kvc.init_cpq(1, 8, 2, 4, cpq)
+    ret = kvc.init_retrieval(1, 8, 2, 4, RetrievalCfg())
+    cqx = kvc.init_cpq_x(1, 8, 16, 2, 4, cpq)
+    vals = {c.__class__.__name__: kvc.bytes_per_token(c, cpq)
+            for c in (dense, x, cq, ret, cqx)}
+    assert all(v > 0 for v in vals.values()), vals
+    assert vals["CPQKVCache"] < vals["DenseKVCache"]   # T2 compresses
+    assert vals["CPQXCache"] < vals["XCache"]          # T1+T2 < T1
+
+    serving = ServingCfg(num_slots=2, page_size=4, num_pages=9)
+    paged = [
+        pgc.init_paged_dense(9, 4, 2, 4),
+        pgc.init_paged_x(9, 4, 16, 2, 4),
+        pgc.init_paged_cpq(9, 4, 2, 2, 4, cpq),
+        pgc.init_paged_retrieval(9, 4, 2, 2, 4, RetrievalCfg()),
+        pgc.init_paged_cpq_x(9, 4, 2, 16, 2, 4, cpq),
+    ]
+    for contiguous, p in zip((dense, x, cq, ret, cqx), paged):
+        bp = pgc.bytes_per_token(p, serving.page_size, cpq)
+        bc = kvc.bytes_per_token(contiguous, cpq)
+        # paged = payload + amortized block-table entry
+        assert abs(bp - (bc + 4.0 / serving.page_size)) < 1e-6
+        assert pgc.arena_bytes(p) > 0
