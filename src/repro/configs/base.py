@@ -84,6 +84,10 @@ class AttentionRuntime:
     mode: str = "dense"
     cpq: Optional[CPQCfg] = None
     retrieval: Optional[RetrievalCfg] = None
+    # paged serving decode: fuse the block-table gather into the Pallas
+    # kernels (dense/CPQ/X-MLA tiers) instead of materializing logical views.
+    # False falls back to the jnp gather path (oracle / benchmark foil).
+    paged_kernels: bool = True
 
     def __post_init__(self):
         assert self.mode in ("dense", "decomposed", "cpq", "retrieval",
@@ -116,6 +120,9 @@ class ServingCfg:
     critical_watermark: float = 0.10
     enable_escalation: bool = False
     prefill_bucket: int = 16       # prompts padded up to a multiple of this
+    # fused paged-attention decode kernels: None defers to the engine's
+    # AttentionRuntime.paged_kernels (default on); True/False overrides it
+    use_paged_kernels: Optional[bool] = None
 
     def __post_init__(self):
         assert self.num_pages >= 2 and self.escalated_pages >= 2

@@ -1,16 +1,59 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-  flash_attn/        baseline dense flash attention (train/prefill)
+  flash_attn/        baseline dense flash attention (train/prefill) +
+                     ``paged_flash_decode_*``: paged single-token decode over
+                     a (P, page, KV, Dh) arena
   decomposed_attn/   T1: fused two-stage (Q W_K^T) X^T decode attention —
                      the sub-matrix pipeline realized as one VMEM-resident
-                     streaming kernel over the X cache
+                     streaming kernel over the X cache +
+                     ``paged_decomposed_decode_*``: same sweep over X pages
+                     (covers the MLA latent cache: shared-rope kv_r == 1)
   cpq_dequant_attn/  T2: decode attention directly over int8 CPQ codes with
-                     in-register HQE dequantization (HBM moves only codes)
+                     in-register HQE dequantization (HBM moves only codes) +
+                     ``paged_cpq_decode_*``: code/level pages + per-slot HQE
+                     side state
   topk_retrieval/    T3: int8 proxy-similarity scoring (the CAM analogue)
 
 Each directory: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
-interpret-mode switch), ref.py (pure-jnp oracle). Kernels TARGET TPU v5e
-(128-aligned MXU tiles, VMEM-resident accumulators) and are VALIDATED with
-interpret=True on CPU.
+interpret-mode switch), ref.py (pure-jnp oracle).
+
+Paged decode entry points (serving/paged_cache.py arenas)
+---------------------------------------------------------
+The ``paged_*`` kernels take ``(pages, block_table, lengths)`` directly: the
+block table is a scalar-prefetch operand, so each grid step's BlockSpec index
+map resolves ``block_table[b, ib]`` and DMAs that PHYSICAL page from the
+arena into VMEM — the contiguous logical view the jnp gather path
+materializes never exists. Masking convention (shared with
+serving/paged_cache.py): block-table entry 0 is the reserved null page whose
+contents are garbage by design; every position >= lengths[b] — all slots of
+an unmapped/null page and the tail of a partial last page — is masked to
+-inf before the online softmax, pages wholly past lengths[b] are skipped
+without issuing MXU work, and a row with lengths[b] == 0 returns zeros.
+``ops.py`` wrappers select the engine-facing defaults; the serving dispatch
+(``decode_attend_paged``) routes dense, CPQ, and X/MLA tiers through them
+when ``AttentionRuntime.paged_kernels`` is set (retrieval T3 keeps the
+gather for its top-k slot selection).
+
+INTERPRET
+---------
+Kernels TARGET TPU v5e (128-aligned MXU tiles, VMEM-resident accumulators)
+and are VALIDATED with interpret=True on CPU. ``INTERPRET`` is the
+package-wide default every ops.py wrapper applies when its ``interpret``
+argument is None; per-call overrides win. It defaults to True (this
+container is CPU-only) and can be forced either way with the
+``REPRO_INTERPRET`` env var (1/0, true/false, yes/no, on/off —
+anything else raises); flip it off on real TPUs. Interpret
+mode checks semantics, not speed — benchmark latency bars only apply
+compiled (see benchmarks/bench_serving.py).
 """
-INTERPRET = True  # this container is CPU-only; flipped off on real TPUs
+import os
+
+_interpret_env = os.environ.get("REPRO_INTERPRET", "1").strip().lower()
+if _interpret_env in ("1", "true", "yes", "on"):
+    INTERPRET = True
+elif _interpret_env in ("0", "false", "no", "off"):
+    INTERPRET = False
+else:
+    raise ValueError(
+        f"REPRO_INTERPRET={_interpret_env!r}: expected 1/0, true/false, "
+        "yes/no, or on/off")

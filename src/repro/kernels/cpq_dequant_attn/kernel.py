@@ -82,6 +82,120 @@ def _kernel(len_ref, q_ref, ck_ref, cv_ref, sk_ref, zk_ref, sv_ref, zv_ref,
         o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel(bt_ref, len_ref, q_ref, ck_ref, cv_ref, sk_ref, zk_ref,
+                  sv_ref, zv_ref, lvk_ref, lvv_ref, o_ref, m_sc, l_sc, acc_sc,
+                  *, scale: float, page_size: int, nb: int, num_levels: int):
+    """Paged T2 step: code/level tiles ARE physical page bt[b, ib] (resolved
+    by the BlockSpec index maps from the scalar-prefetched block table);
+    per-slot HQE scale/zero stay slot-indexed by b. Dequantization happens in
+    VMEM on the page — HBM moved only the compressed bytes of mapped pages."""
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # unmapped (null) pages sit wholly past the row's length: skip
+    @pl.when(ib * page_size < len_ref[b])
+    def _compute():
+        q = q_ref[0, 0]                                  # (G, Dh)
+        ck = ck_ref[0, :, 0, :]                          # (page, Dh) i8
+        cv = cv_ref[0, :, 0, :]                          # (page, Dv) i8
+
+        def onehot(lv):                                  # (page,) -> (page, L)
+            return (lv[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (lv.shape[0], num_levels), 1)).astype(jnp.float32)
+
+        def dequant(codes, lv_oh, s_ref, z_ref):
+            # round dequantized tiles to bf16 like the jnp gather path
+            # (cpq_chunked_decode_attention) so paged-kernel decode stays
+            # token-exact vs it under greedy sampling
+            return _dequant(codes, lv_oh, s_ref, z_ref).astype(
+                jnp.bfloat16).astype(jnp.float32)
+
+        k_hat = dequant(ck, onehot(lvk_ref[0, :, 0]), sk_ref, zk_ref)
+        s = jax.lax.dot_general(q.astype(jnp.float32), k_hat,
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ib * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < len_ref[b], s, NEG_INF)      # partial last page
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        v_hat = dequant(cv, onehot(lvv_ref[0, :, 0]), sv_ref, zv_ref)
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v_hat, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_cpq_decode_fwd(q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
+                         level_k, level_v, block_table, lengths, *,
+                         scale: float, interpret: bool = True):
+    """Paged T2 decode: the grid's innermost axis iterates block-table entries
+    and each mapped code/level page is DMA'd from the arena into VMEM — no
+    contiguous logical CPQ view is materialized.
+
+    q: (B, KV, G, Dh); codes_*: (P, page, KV, D*) i8 pools; level_*:
+    (P, page, KV) i32 pools; scale_/zero_*: (B, L, KV, D*) f32 per-SLOT HQE
+    side state; block_table: (B, max_blocks) int32 (0 = null page);
+    lengths: (B,) int32. Returns (B, KV, G, Dv) f32.
+
+    Masking convention: positions >= lengths[b] (null pages, partial last
+    page) are dead; lengths[b] == 0 rows return zeros."""
+    B, KV, G, Dh = q.shape
+    page = codes_k.shape[1]
+    Dv = codes_v.shape[-1]
+    L = scale_k.shape[1]
+    nb = block_table.shape[1]
+
+    kern = functools.partial(_paged_kernel, scale=scale, page_size=page,
+                             nb=nb, num_levels=L)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_table, lengths
+            grid=(B, KV, nb),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, Dh), lambda b, kv, ib, bt, ln: (b, kv, 0, 0)),
+                pl.BlockSpec((1, page, 1, Dh),
+                             lambda b, kv, ib, bt, ln: (bt[b, ib], 0, kv, 0)),
+                pl.BlockSpec((1, page, 1, Dv),
+                             lambda b, kv, ib, bt, ln: (bt[b, ib], 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dh), lambda b, kv, ib, bt, ln: (b, 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dh), lambda b, kv, ib, bt, ln: (b, 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dv), lambda b, kv, ib, bt, ln: (b, 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dv), lambda b, kv, ib, bt, ln: (b, 0, kv, 0)),
+                pl.BlockSpec((1, page, 1),
+                             lambda b, kv, ib, bt, ln: (bt[b, ib], 0, kv)),
+                pl.BlockSpec((1, page, 1),
+                             lambda b, kv, ib, bt, ln: (bt[b, ib], 0, kv)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, Dv),
+                                   lambda b, kv, ib, bt, ln: (b, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Dv), jnp.float32),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
+      level_k.astype(jnp.int32), level_v.astype(jnp.int32))
+
+
 def cpq_decode_fwd(q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
                    level_k, level_v, length, *, scale: float,
                    block_n: int = 512, interpret: bool = True):

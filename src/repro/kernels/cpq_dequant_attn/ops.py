@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro import kernels as K
 from repro.core.kv_cache import CPQKVCache
-from repro.kernels.cpq_dequant_attn.kernel import cpq_decode_fwd
+from repro.kernels.cpq_dequant_attn.kernel import (cpq_decode_fwd,
+                                                   paged_cpq_decode_fwd)
 
 
 @partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
@@ -26,4 +27,25 @@ def cpq_decode_tpu(q, cache: CPQKVCache, scale: float, block_n: int = 512,
         cache.k.scale, cache.k.zero, cache.v.scale, cache.v.zero,
         cache.k.level, cache.v.level, cache.length, scale=scale,
         block_n=block_n, interpret=interpret)
+    return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_cpq_decode_tpu(q, kt, vt, block_table, lengths, scale: float,
+                         interpret: bool | None = None):
+    """Paged T2 decode over PagedCPQTensor arenas (serving/paged_cache.py)
+    through their block table — no contiguous logical CPQ view. q: (B, 1, H,
+    Dh) roped query; kt/vt: PagedCPQTensor (code/level pages + per-slot HQE
+    scale/zero); block_table: (B, max_blocks) int32 (0 = null page);
+    lengths: (B,) int32. -> (B, 1, H, Dv)."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    B, _, H, Dh = q.shape
+    KV = kt.codes.shape[2]
+    g = H // KV
+    qg = q[:, 0].reshape(B, KV, g, Dh)
+    out = paged_cpq_decode_fwd(
+        qg, kt.codes, vt.codes, kt.scale, kt.zero, vt.scale, vt.zero,
+        kt.level, vt.level, block_table, lengths, scale=scale,
+        interpret=interpret)
     return out.reshape(B, 1, H, -1).astype(q.dtype)

@@ -16,6 +16,42 @@ def _dequant_full(codes, scale, zero, level):
     return jnp.where(c == 0.0, 0.0, (c - 1.0) * s + z)
 
 
+def paged_cpq_decode_ref(q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
+                         level_k, level_v, block_table, lengths, scale):
+    """Oracle for the paged T2 kernel, straight from the paged layout:
+    q: (B, KV, G, Dh); codes_*: (P, page, KV, D*) i8 pools; level_*:
+    (P, page, KV) i32 pools; scale_/zero_*: (B, L, KV, D*) per-slot HQE side
+    state; block_table: (B, max_blocks) (0 = null page); lengths: (B,).
+    -> (B, KV, G, Dv) f32; positions >= lengths[b] masked, empty rows zero."""
+    B = q.shape[0]
+    page, KV = codes_k.shape[1], codes_k.shape[2]
+    nb = block_table.shape[1]
+    ck = jnp.take(codes_k, block_table, axis=0).reshape(
+        B, nb * page, KV, codes_k.shape[-1])
+    cv = jnp.take(codes_v, block_table, axis=0).reshape(
+        B, nb * page, KV, codes_v.shape[-1])
+    lk = jnp.take(level_k, block_table, axis=0).reshape(B, nb * page, KV)
+    lv = jnp.take(level_v, block_table, axis=0).reshape(B, nb * page, KV)
+    # null-page levels may be arbitrary garbage: clamp so the gather in
+    # _dequant_full stays in range (the positions are masked below anyway)
+    L = scale_k.shape[1]
+    lk = jnp.clip(lk, 0, L - 1)
+    lv = jnp.clip(lv, 0, L - 1)
+    # same bf16 rounding of dequantized tiles as the serving gather path
+    k_hat = _dequant_full(ck, scale_k, zero_k, lk).astype(
+        jnp.bfloat16).astype(jnp.float32)
+    v_hat = _dequant_full(cv, scale_v, zero_v, lv).astype(
+        jnp.bfloat16).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bnkd->bkgn", q.astype(jnp.float32), k_hat) * scale
+    pos = jnp.arange(nb * page, dtype=jnp.int32)
+    live = pos[None, :] < lengths[:, None]
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    l = jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgn,bnkd->bkgd", w, v_hat) / jnp.maximum(l, 1e-30)
+    return jnp.where((lengths > 0)[:, None, None, None], o, 0.0)
+
+
 def cpq_decode_ref(q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
                    level_k, level_v, length, scale):
     """q: (B, KV, G, Dh) -> (B, KV, G, Dv) f32."""

@@ -70,6 +70,116 @@ def _kernel(len_ref, r_ref, qr_ref, x_ref, kr_ref, p_ref,
         p_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(p_ref.dtype)
 
 
+def _paged_kernel(bt_ref, len_ref, r_ref, qr_ref, x_ref, kr_ref, p_ref,
+                  m_sc, l_sc, acc_sc, *, scale: float, page_size: int,
+                  nb: int, rope_dims: int, kv_r: int):
+    """One (b, ib) step over physical X page bt[b, ib] (resolved by the
+    BlockSpec index maps from the scalar-prefetched block table). Both
+    cascaded MatMuls of the decomposition consume the page on ONE read while
+    it sits in VMEM; rope keys may be shared (kv_r == 1, MLA) or
+    per-kv-head; softmax state is carried online in f32 scratch."""
+    b = pl.program_id(0)
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # unmapped (null) pages sit wholly past the row's length: skip
+    @pl.when(ib * page_size < len_ref[b])
+    def _compute():
+        r = r_ref[0].astype(jnp.float32)           # (H, Dm)
+        x = x_ref[0].astype(jnp.float32)           # (page, Dm)
+        # --- score stage: s = R X^T on the in-VMEM page
+        s = jax.lax.dot_general(r, x, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (H, page)
+        if rope_dims > 0:
+            H = r.shape[0]
+            g_r = H // kv_r
+            rope_rows = []
+            for j in range(kv_r):       # static, tiny: per-kv-head rope slice
+                qj = qr_ref[0, j * g_r:(j + 1) * g_r, :].astype(jnp.float32)
+                kj = kr_ref[0, :, j, :].astype(jnp.float32)   # (page, Rr)
+                rope_rows.append(jax.lax.dot_general(
+                    qj, kj, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32))
+            s = s + jnp.concatenate(rope_rows, axis=0)
+        s = s * scale
+        pos = ib * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < len_ref[b], s, NEG_INF)        # partial last page
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        # --- value stage: P += p X, same page still in VMEM
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, x, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        p_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(p_ref.dtype)
+
+
+def paged_decomposed_decode_fwd(r: jax.Array, q_rope: jax.Array,
+                                x_pages: jax.Array, kr_pages: jax.Array,
+                                block_table: jax.Array, lengths: jax.Array, *,
+                                scale: float, interpret: bool = True) -> jax.Array:
+    """Paged T1/MLA decode: the grid's innermost axis iterates block-table
+    entries and each mapped X (+roped key) page is DMA'd from the arena into
+    VMEM — no contiguous logical X view is materialized.
+
+    r: (B, H, Dm) = q_nope W_K^T; q_rope: (B, H, Rr) (Rr may be 0);
+    x_pages: (P, page, Dm) pool; kr_pages: (P, page, KV_r, Rr) pool with
+    KV_r == 1 (MLA shared rope) or per-kv-head; block_table: (B, max_blocks)
+    int32 (0 = null page); lengths: (B,) int32. Returns P: (B, H, Dm) —
+    caller applies W_V.
+
+    Masking convention: positions >= lengths[b] (null pages, partial last
+    page) are dead; lengths[b] == 0 rows return zeros."""
+    B, H, Dm = r.shape
+    page = x_pages.shape[1]
+    Rr = q_rope.shape[-1]
+    kv_r = kr_pages.shape[2] if Rr else 1
+    nb = block_table.shape[1]
+    if not Rr:  # keep a well-formed (non-0-width) operand for the BlockSpec
+        q_rope = jnp.zeros((B, H, 1), r.dtype)
+        kr_pages = jnp.zeros((x_pages.shape[0], page, 1, 1), x_pages.dtype)
+    Rp = q_rope.shape[-1]
+
+    kern = functools.partial(_paged_kernel, scale=scale, page_size=page,
+                             nb=nb, rope_dims=Rr, kv_r=kv_r)
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_table, lengths
+            grid=(B, nb),           # innermost axis sweeps block-table entries
+            in_specs=[
+                pl.BlockSpec((1, H, Dm), lambda b, ib, bt, ln: (b, 0, 0)),
+                pl.BlockSpec((1, H, Rp), lambda b, ib, bt, ln: (b, 0, 0)),
+                pl.BlockSpec((1, page, Dm),
+                             lambda b, ib, bt, ln: (bt[b, ib], 0, 0)),
+                pl.BlockSpec((1, page, kv_r, Rp),
+                             lambda b, ib, bt, ln: (bt[b, ib], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, Dm), lambda b, ib, bt, ln: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, 1), jnp.float32),
+                pltpu.VMEM((H, Dm), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dm), x_pages.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      r, q_rope, x_pages, kr_pages)
+
+
 def decomposed_decode_fwd(r: jax.Array, q_rope: jax.Array, x: jax.Array,
                           k_rope: jax.Array, length: jax.Array, *,
                           scale: float, block_n: int = 512,

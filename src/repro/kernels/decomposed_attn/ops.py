@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import kernels as K
-from repro.kernels.decomposed_attn.kernel import decomposed_decode_fwd
+from repro.kernels.decomposed_attn.kernel import (decomposed_decode_fwd,
+                                                  paged_decomposed_decode_fwd)
 
 
 @partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
@@ -46,3 +47,36 @@ def decomposed_decode_tpu(q_nope, q_rope, x_cache, k_rope, w_k_nope, w_v,
     pg = p.reshape(B, KV, g, Dm)
     out = jnp.einsum("bkgm,mkd->bkgd", pg, w_v).reshape(B, 1, H, Dv)
     return out
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decomposed_decode_tpu(q_nope, q_rope, x_pages, kr_pages,
+                                block_table, lengths, w_k_nope, w_v,
+                                scale: float, interpret: bool | None = None):
+    """Paged T1/MLA decode over a (P, page, Dm) X arena through its block
+    table — no contiguous logical view. q_nope: (B, 1, H, Dn); q_rope:
+    (B, 1, H, Rr) or None/Rr == 0; kr_pages: (P, page, KV_r, Rr) with
+    KV_r == 1 (MLA shared rope) or per-kv-head; w_k_nope: (Dm, KV, Dn);
+    w_v: (Dm, KV, Dv); block_table: (B, max_blocks) int32 (0 = null page);
+    lengths: (B,) int32. Returns (B, 1, H, Dv)."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    B, _, H, Dn = q_nope.shape
+    Dm = x_pages.shape[-1]
+    KV, Dv = w_v.shape[1], w_v.shape[2]
+    g = H // KV
+
+    # R = q W_K^T  (first cascaded MatMul — tiny for decode)
+    qg = q_nope[:, 0].reshape(B, KV, g, Dn)
+    r = jnp.einsum("bkgd,mkd->bkgm", qg, w_k_nope).reshape(B, H, Dm)
+
+    qr = q_rope[:, 0] if q_rope is not None and q_rope.shape[-1] > 0 \
+        else jnp.zeros((B, H, 0), x_pages.dtype)
+
+    p = paged_decomposed_decode_fwd(
+        r.astype(x_pages.dtype), qr.astype(x_pages.dtype), x_pages, kr_pages,
+        block_table, lengths, scale=scale, interpret=interpret)
+
+    # out = P W_V  (second tiny dense MatMul)
+    pg = p.reshape(B, KV, g, Dm)
+    return jnp.einsum("bkgm,mkd->bkgd", pg, w_v).reshape(B, 1, H, Dv)

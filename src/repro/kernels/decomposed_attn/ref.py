@@ -8,6 +8,39 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def paged_decomposed_decode_ref(r, q_rope, x_pages, kr_pages, block_table,
+                                lengths, scale):
+    """Oracle for the paged T1/MLA kernel, straight from the paged layout:
+    r: (B, H, Dm); q_rope: (B, H, Rr) (Rr may be 0); x_pages: (P, page, Dm);
+    kr_pages: (P, page, KV_r, Rr) (KV_r == 1 shared / per-kv-head);
+    block_table: (B, max_blocks) (0 = null page); lengths: (B,).
+    -> P: (B, H, Dm); positions >= lengths[b] masked, empty rows zero."""
+    B, H, Dm = r.shape
+    page = x_pages.shape[1]
+    nb = block_table.shape[1]
+    x = jnp.take(x_pages, block_table, axis=0).reshape(B, nb * page, Dm)
+    s = jnp.einsum("bhm,bnm->bhn", r.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    if q_rope.shape[-1] > 0:
+        kv_r, Rr = kr_pages.shape[2], kr_pages.shape[3]
+        g_r = H // kv_r
+        kr = jnp.take(kr_pages, block_table, axis=0).reshape(
+            B, nb * page, kv_r, Rr)
+        qg = q_rope.reshape(B, kv_r, g_r, Rr)
+        s = s + jnp.einsum("bkgr,bnkr->bkgn", qg.astype(jnp.float32),
+                           kr.astype(jnp.float32)).reshape(B, H, nb * page)
+    s = s * scale
+    pos = jnp.arange(nb * page, dtype=jnp.int32)
+    live = pos[None, :] < lengths[:, None]
+    s = jnp.where(live[:, None, :], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    l = jnp.sum(w, axis=-1, keepdims=True)
+    p = jnp.einsum("bhn,bnm->bhm", w, x.astype(jnp.float32))
+    p = p / jnp.maximum(l, 1e-30)
+    return jnp.where((lengths > 0)[:, None, None], p,
+                     0.0).astype(x_pages.dtype)
+
+
 def decomposed_decode_ref(r, q_rope, x, k_rope, length, scale):
     """r: (B,H,Dm); q_rope: (B,H,Rr); x: (B,N,Dm); k_rope: (B,N,Rr);
     -> P: (B, H, Dm)."""

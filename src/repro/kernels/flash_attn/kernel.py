@@ -71,6 +71,108 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
             acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_sc, l_sc, acc_sc, *, scale: float, page_size: int,
+                         nb: int):
+    """One (b, kv, ib) step: the K/V tile IS physical page bt[b, ib] — the
+    BlockSpec index map resolved the block table before the body ran, so the
+    page was DMA'd straight from the arena into VMEM (no logical view).
+
+    One sweep serves both attention matmuls per page (scores AND weighted-V
+    accumulate while the page sits in VMEM); softmax state is carried online
+    in f32 scratch across the block-table sweep."""
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # pages wholly past the row's length are unmapped (null page 0, garbage
+    # contents by convention) — skip them entirely: no MXU work
+    @pl.when(ib * page_size < len_ref[b])
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page, Dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # (page, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale      # (G, page)
+        # null-page / partial-last-page masking: position vs per-row length
+        pos = ib * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < len_ref[b], s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_decode_fwd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           block_table: jax.Array, lengths: jax.Array, *,
+                           scale: float, interpret: bool = True) -> jax.Array:
+    """Paged single-token flash decode: grid iterates block-table entries and
+    DMAs each mapped page from the arena into VMEM via the BlockSpec index map
+    (scalar-prefetched block table) — the contiguous logical K/V view is never
+    materialized.
+
+    q: (B, 1, H, Dh); k_pages/v_pages: (P, page, KV, Dh|Dv) physical pools;
+    block_table: (B, max_blocks) int32, 0 = unmapped (null page);
+    lengths: (B,) int32 valid tokens per row. Returns (B, 1, H, Dv).
+
+    Masking convention (shared with serving/paged_cache.py): positions >=
+    lengths[b] — including every slot of an unmapped/null page and the tail of
+    a partial last page — contribute nothing; a row with lengths[b] == 0
+    returns zeros."""
+    B, _, H, Dh = q.shape
+    page = k_pages.shape[1]
+    KV = k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    g = H // KV
+    nb = block_table.shape[1]
+    qg = q[:, 0].reshape(B, KV, g, Dh)
+
+    kern = functools.partial(_paged_decode_kernel, scale=scale,
+                             page_size=page, nb=nb)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_table, lengths
+            grid=(B, KV, nb),       # innermost axis sweeps block-table entries
+            in_specs=[
+                pl.BlockSpec((1, 1, g, Dh), lambda b, kv, ib, bt, ln: (b, kv, 0, 0)),
+                pl.BlockSpec((1, page, 1, Dh),
+                             lambda b, kv, ib, bt, ln: (bt[b, ib], 0, kv, 0)),
+                pl.BlockSpec((1, page, 1, Dv),
+                             lambda b, kv, ib, bt, ln: (bt[b, ib], 0, kv, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, g, Dv),
+                                   lambda b, kv, ib, bt, ln: (b, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, 1), jnp.float32),
+                pltpu.VMEM((g, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, KV, g, Dv), q.dtype),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_pages, v_pages)
+    return out.reshape(B, 1, H, Dv)
+
+
 def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         scale: float, causal: bool = True,
                         block_q: int = 512, block_k: int = 512,

@@ -6,7 +6,8 @@ from functools import partial
 import jax
 
 from repro import kernels as K
-from repro.kernels.flash_attn.kernel import flash_attention_fwd
+from repro.kernels.flash_attn.kernel import (flash_attention_fwd,
+                                             paged_flash_decode_fwd)
 
 
 @partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k",
@@ -19,3 +20,16 @@ def flash_attention_tpu(q, k, v, scale: float, causal: bool = True,
     return flash_attention_fwd(q, k, v, scale=scale, causal=causal,
                                block_q=block_q, block_k=block_k,
                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_decode_tpu(q, k_pages, v_pages, block_table, lengths,
+                           scale: float, interpret: bool | None = None):
+    """Paged dense decode over a (P, page, KV, Dh) arena through its block
+    table — no contiguous logical view. q: (B, 1, H, Dh); block_table:
+    (B, max_blocks) int32 (0 = null page); lengths: (B,) int32 valid tokens
+    per row. -> (B, 1, H, Dv)."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    return paged_flash_decode_fwd(q, k_pages, v_pages, block_table, lengths,
+                                  scale=scale, interpret=interpret)

@@ -7,6 +7,35 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def paged_flash_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                           block_table: jax.Array, lengths: jax.Array,
+                           scale: float) -> jax.Array:
+    """Oracle for the paged decode kernel, straight from the paged layout:
+    q: (B, 1, H, Dh); k_pages/v_pages: (P, page, KV, Dh|Dv); block_table:
+    (B, max_blocks) int32 (0 = null page); lengths: (B,). -> (B, 1, H, Dv).
+    Positions >= lengths[b] (null pages, partial last page) are masked;
+    lengths[b] == 0 rows return zeros."""
+    B, _, H, Dh = q.shape
+    page, KV = k_pages.shape[1], k_pages.shape[2]
+    nb = block_table.shape[1]
+    g = H // KV
+    kl = jnp.take(k_pages, block_table, axis=0).reshape(B, nb * page, KV, Dh)
+    vl = jnp.take(v_pages, block_table, axis=0).reshape(
+        B, nb * page, KV, v_pages.shape[-1])
+    qg = q[:, 0].reshape(B, KV, g, Dh)
+    s = jnp.einsum("bkgd,bnkd->bkgn", qg.astype(jnp.float32),
+                   kl.astype(jnp.float32)) * scale
+    pos = jnp.arange(nb * page, dtype=jnp.int32)
+    live = pos[None, :] < lengths[:, None]                      # (B, N)
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    l = jnp.sum(w, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgn,bnkd->bkgd", w, vl.astype(jnp.float32))
+    o = o / jnp.maximum(l, 1e-30)
+    o = jnp.where((lengths > 0)[:, None, None, None], o, 0.0)   # empty rows
+    return o.reshape(B, 1, H, -1).astype(q.dtype)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, scale: float,
                         causal: bool = True) -> jax.Array:
     """q: (B, T, H, D); k/v: (B, S, KV, D) -> (B, T, H, Dv). Exact SDA."""

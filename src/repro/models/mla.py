@@ -188,7 +188,12 @@ def _q_ckv_rows(cfg: ModelConfig, p, x_t: jax.Array, positions: jax.Array):
 
 def mla_decode_rows(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
                     rows, cache):
-    """Absorbed decode over a paged latent arena with per-row positions."""
+    """Absorbed decode over a paged latent arena with per-row positions.
+    With ``rt.paged_kernels`` the latent (X) tier runs the fused paged
+    decomposed kernel — latent pages are DMA'd straight from the arena
+    through the block table, no logical view. The CPQ-compressed latent
+    keeps the dequant-gather path."""
+    from repro.kernels.decomposed_attn.ops import paged_decomposed_decode_tpu
     from repro.serving import paged_cache as pgc
 
     q_nope, q_rope, c_t, k_rope_t = _q_ckv_rows(cfg, p, x_t, rows.lengths)
@@ -203,6 +208,11 @@ def mla_decode_rows(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
         c_arena = cpq_lib.cpq_dequant(xt, x_t.dtype)[:, :, 0, :]
     else:
         cache = pgc.append_x(cache, rows, c_t, k_rope_t)
+        if rt.paged_kernels:
+            o = paged_decomposed_decode_tpu(
+                q_nope, q_rope, cache.x, cache.k_rope, rows.block_table,
+                new_len, p["wuk"], p["wuv"], _scale(cfg))
+            return _out(cfg, p, o), cache
         c_arena = pgc.gather_pages(cache.x, rows.block_table)
 
     o = decomposed_attention(

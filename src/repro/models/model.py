@@ -233,7 +233,10 @@ def init_paged_caches(cfg: ModelConfig, rt: AttentionRuntime, serving,
 def decode_step_rows(cfg: ModelConfig, rt: AttentionRuntime, params,
                      tokens: jax.Array, rows: pgc.RowState, caches):
     """One continuous-batching decode step: every row at its own position
-    (``rows.lengths``), caches gathered through the block table.
+    (``rows.lengths``). With ``rt.paged_kernels`` (default) the dense, CPQ,
+    and X/MLA attention tiers read their arenas through the fused paged
+    Pallas kernels (pages DMA'd via the block table, no logical view);
+    otherwise caches are gathered through the block table in jnp.
     tokens: (B, 1) int32. Returns (logits (B, V), caches)."""
     x = embed_inputs(cfg, params["embed"], {"tokens": tokens}, rows.lengths[:, None])
 

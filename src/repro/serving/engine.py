@@ -140,6 +140,11 @@ class ContinuousServeEngine:
         self.params = params
         self.serving = serving
         rt = rt or cfg.attention
+        if (serving.use_paged_kernels is not None
+                and rt.paged_kernels != serving.use_paged_kernels):
+            # explicit serving-config override of the decode-kernel choice
+            # (fused paged kernels vs the jnp gather path); None defers to rt
+            rt = dataclasses.replace(rt, paged_kernels=serving.use_paged_kernels)
         self.tiered = bool(serving.enable_escalation and rt.mode == "dense")
         if self.tiered and rt.cpq is None:
             rt = dataclasses.replace(rt, cpq=CPQCfg())

@@ -469,15 +469,25 @@ def decode_attend_paged(
     scale: float,
 ) -> tuple[jax.Array, PagedCache]:
     """Paged analogue of ``core.attention.decode_attend``: scatter one token
-    per row through the block table, then attend over the gathered logical
-    view with per-row lengths. Every row sits at its own position
-    (``rows.lengths``); inactive rows write the null page and their output is
-    garbage the engine never reads. Returns (out (B,1,H,Dv), new_cache)."""
+    per row through the block table, then attend with per-row lengths. With
+    ``rt.paged_kernels`` (the default) the dense, CPQ, and X/MLA tiers run
+    the fused paged Pallas kernels, whose grid iterates block-table entries
+    and DMAs mapped pages straight from the arena into VMEM — no contiguous
+    logical view is ever materialized. ``rt.paged_kernels=False`` falls back
+    to the jnp gather path (the numerics oracle and benchmark foil);
+    retrieval (T3, top-k slot selection) and the T1+T2 composition keep the
+    gather path. Every row sits at its own position (``rows.lengths``);
+    inactive rows write the null page and their output is garbage the engine
+    never reads. Returns (out (B,1,H,Dv), new_cache)."""
     from repro.configs.base import AttentionRuntime
     from repro.core import attention as core_attn
     from repro.core import retrieval_attention as ret_lib
     from repro.core.decomposed_attention import decomposed_attention
+    from repro.kernels.cpq_dequant_attn.ops import paged_cpq_decode_tpu
+    from repro.kernels.decomposed_attn.ops import paged_decomposed_decode_tpu
+    from repro.kernels.flash_attn.ops import paged_flash_decode_tpu
 
+    fused = rt.paged_kernels
     new_len = rows.lengths + rows.active.astype(jnp.int32)
 
     if isinstance(cache, TieredPagedCache):
@@ -486,7 +496,7 @@ def decode_attend_paged(
         rows_d = rows._replace(active=rows.active & (rows.tier == 0))
         rows_c = rows._replace(active=rows.active & (rows.tier == 1),
                                block_table=rows.alt_block_table)
-        rt_c = AttentionRuntime(mode="cpq", cpq=rt.cpq)
+        rt_c = AttentionRuntime(mode="cpq", cpq=rt.cpq, paged_kernels=fused)
         out_d, dense = decode_attend_paged(
             rt, cache.dense, rows_d, q=q, k_t=k_t, v_t=v_t, x_t=x_t,
             k_rope_t=k_rope_t, q_nope=q_nope, q_rope=q_rope,
@@ -500,27 +510,40 @@ def decode_attend_paged(
 
     if isinstance(cache, PagedDenseKVCache):
         cache = append_dense(cache, rows, k_t, v_t)
-        out = core_attn.dense_attention(
-            q, gather_pages(cache.k, rows.block_table),
-            gather_pages(cache.v, rows.block_table),
-            scale, causal=False, kv_length=new_len)
+        if fused:
+            out = paged_flash_decode_tpu(
+                q, cache.k, cache.v, rows.block_table, new_len, scale)
+        else:
+            out = core_attn.dense_attention(
+                q, gather_pages(cache.k, rows.block_table),
+                gather_pages(cache.v, rows.block_table),
+                scale, causal=False, kv_length=new_len)
         return out, cache
 
     if isinstance(cache, PagedXCache):
         cache = append_x(cache, rows, x_t, k_rope_t)
-        out = decomposed_attention(
-            q_nope, q_rope, gather_pages(cache.x, rows.block_table),
-            gather_pages(cache.k_rope, rows.block_table),
-            w_k_nope, w_v, new_len, scale)
+        if fused:
+            out = paged_decomposed_decode_tpu(
+                q_nope, q_rope, cache.x, cache.k_rope,
+                rows.block_table, new_len, w_k_nope, w_v, scale)
+        else:
+            out = decomposed_attention(
+                q_nope, q_rope, gather_pages(cache.x, rows.block_table),
+                gather_pages(cache.k_rope, rows.block_table),
+                w_k_nope, w_v, new_len, scale)
         return out, cache
 
     if isinstance(cache, PagedCPQKVCache):
         cache = PagedCPQKVCache(
             k=append_cpq_tensor(cache.k, rows, k_t, rt.cpq),
             v=append_cpq_tensor(cache.v, rows, v_t, rt.cpq))
-        out = core_attn.cpq_chunked_decode_attention(
-            q, logical_cpq(cache.k, rows.block_table),
-            logical_cpq(cache.v, rows.block_table), new_len, scale)
+        if fused:
+            out = paged_cpq_decode_tpu(
+                q, cache.k, cache.v, rows.block_table, new_len, scale)
+        else:
+            out = core_attn.cpq_chunked_decode_attention(
+                q, logical_cpq(cache.k, rows.block_table),
+                logical_cpq(cache.v, rows.block_table), new_len, scale)
         return out, cache
 
     if isinstance(cache, PagedRetrievalCache):

@@ -8,6 +8,19 @@ import sys
 import jax
 import pytest
 
+try:  # seed-pinned hypothesis profiles: reproducible CI runs (optional dep)
+    from hypothesis import settings as _hyp_settings
+
+    _hyp_settings.register_profile("ci", derandomize=True, deadline=None,
+                                   max_examples=25, print_blob=True)
+    _hyp_settings.register_profile("dev", deadline=None)
+    # CI runs replay a fixed example set (reproducible); local runs keep
+    # exploring fresh examples unless a profile is pinned explicitly
+    _hyp_settings.load_profile(os.environ.get(
+        "HYPOTHESIS_PROFILE", "ci" if os.environ.get("CI") else "dev"))
+except ImportError:  # pragma: no cover - property tests skip via the shim
+    pass
+
 
 @pytest.fixture
 def rng():

@@ -89,6 +89,101 @@ def test_scheduler_growth_and_ceiling():
     assert not sched.ensure_writable(r)           # context ceiling (3 blocks)
 
 
+def test_admission_at_exact_pool_exhaustion():
+    """A prompt whose page demand EQUALS the free-page count admits (no
+    off-by-one slack required); the next request waits until a retirement
+    frees pages, then takes the vacated capacity."""
+    serving = ServingCfg(num_slots=2, page_size=4, num_pages=5,  # 4 usable
+                         max_blocks_per_slot=4)
+    sched = Scheduler(serving)
+    a = Request(rid=0, prompt=np.arange(16, dtype=np.int32), max_new_tokens=0)
+    b = Request(rid=1, prompt=np.arange(4, dtype=np.int32), max_new_tokens=0)
+    sched.submit(a)
+    sched.submit(b)
+    got = sched.admit_next(now=0, step=0)
+    assert got is a and sched.dense_alloc.num_free == 0   # exact fit admitted
+    assert sched.admit_next(now=0, step=0) is None        # b must wait
+    assert b.state == "queued"
+    sched.retire(a, step=1, reason="eos")
+    got = sched.admit_next(now=0, step=1)
+    assert got is b and len(b.pages) == 1
+    sched.retire(b, step=2, reason="eos")
+    assert sched.dense_alloc.num_used == 0
+
+
+def test_preemption_picks_newest_same_arena_row():
+    """The preemption victim is the YOUNGEST running request (latest
+    admitted), never the grower itself — LIFO recompute keeps the oldest
+    request's progress."""
+    serving = ServingCfg(num_slots=3, page_size=2, num_pages=9,
+                         max_blocks_per_slot=4)
+    sched = Scheduler(serving)
+    reqs = [Request(rid=i, prompt=np.arange(4, dtype=np.int32),
+                    max_new_tokens=2) for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    for step, r in enumerate(reqs):
+        assert sched.admit_next(now=step, step=step) is r  # staggered ages
+    victim = sched.preemption_victim(exclude=reqs[0])
+    assert victim is reqs[2]                               # newest row
+    victim = sched.preemption_victim(exclude=reqs[2])      # newest excluded
+    assert victim is reqs[1]
+    sched.preempt(reqs[2])
+    assert reqs[2].state == "queued" and reqs[2].pages == []
+    assert sched.queue[0] is reqs[2]                       # requeued at front
+    # engine-level: under page starvation the OLDER request keeps its slot
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ContinuousServeEngine(cfg, params, serving=ServingCfg(
+        num_slots=2, page_size=4, num_pages=7, max_blocks_per_slot=8,
+        prefill_bucket=4))
+    rng = np.random.default_rng(11)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=10) for i in range(2)]
+    res, stats = eng.serve(reqs, GenerationConfig(max_new_tokens=10))
+    assert stats["preemptions"] >= 1
+    assert res[1]["preemptions"] >= 1 and res[0]["preemptions"] == 0
+    assert all(len(res[i]["tokens"]) == 10 for i in res)
+    assert stats["dense_pages_leaked"] == 0
+
+
+def test_escalation_then_continued_decode_is_correct(model):
+    """Watermark escalation mid-request must not corrupt the survivor: the
+    escalated request keeps decoding AFTER the dense -> T2 migration (its
+    done_step postdates escalation), finishes its full budget with in-vocab
+    tokens, and both arenas end leak-free. A re-run of the same workload is
+    bit-identical (escalation is deterministic, no hidden state)."""
+    cfg, params = model
+    serving = ServingCfg(num_slots=2, page_size=4, num_pages=9,
+                         escalated_pages=33, max_blocks_per_slot=8,
+                         prefill_bucket=4, low_watermark=0.75,
+                         critical_watermark=0.5, enable_escalation=True)
+    eng = ContinuousServeEngine(cfg, params, serving=serving)
+
+    def fresh():
+        rng = np.random.default_rng(13)
+        return [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 7
+                                                   ).astype(np.int32),
+                        max_new_tokens=12) for i in range(2)]
+
+    res, stats = eng.serve(fresh(), GenerationConfig(max_new_tokens=12))
+    assert stats["escalations"] >= 1
+    esc = [i for i in res if res[i]["escalated"]]
+    assert esc
+    for i in esc:
+        t = res[i]["tokens"]
+        assert len(t) == 12 and res[i]["finish_reason"] == "max_tokens"
+        assert (t >= 0).all() and (t < cfg.vocab_size).all()
+        # decode continued after the escalation step (which can only happen
+        # once decoding is underway, i.e. after admission)
+        assert res[i]["done_step"] > res[i]["admitted_step"] + 1
+    assert stats["dense_pages_leaked"] == 0 and stats["cpq_pages_leaked"] == 0
+    res2, stats2 = eng.serve(fresh(), GenerationConfig(max_new_tokens=12))
+    for i in res:
+        np.testing.assert_array_equal(res[i]["tokens"], res2[i]["tokens"])
+    assert stats2["escalations"] == stats["escalations"]
+
+
 # ------------------------------------------------------------- engine runs
 
 
@@ -119,7 +214,8 @@ def test_admitted_request_resumes_at_correct_position(model):
         out, _ = static.generate({"tokens": jnp.asarray(r.prompt[None])}, gen)
         refs.append(out[0])
     serving = ServingCfg(num_slots=2, page_size=4, num_pages=33,
-                         max_blocks_per_slot=8, prefill_bucket=4)
+                         max_blocks_per_slot=8, prefill_bucket=4,
+                         use_paged_kernels=False)  # gather path == static ops
     eng = ContinuousServeEngine(cfg, params, serving=serving)
     res, stats = eng.serve(reqs, gen)
     for i, ref in enumerate(refs):
@@ -141,7 +237,8 @@ def test_preemption_recompute_is_exact(model):
     for r in reqs_small:
         refs[r.rid] = static.generate({"tokens": jnp.asarray(r.prompt[None])}, gen)[0][0]
     serving = ServingCfg(num_slots=3, page_size=4, num_pages=10,  # too small
-                         max_blocks_per_slot=8, prefill_bucket=4)
+                         max_blocks_per_slot=8, prefill_bucket=4,
+                         use_paged_kernels=False)  # gather path == static ops
     eng = ContinuousServeEngine(cfg, params, serving=serving)
     res, stats = eng.serve(reqs_small, gen)
     assert stats["preemptions"] >= 1
