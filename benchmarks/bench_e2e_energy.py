@@ -42,6 +42,13 @@ class TrafficCfg:
     weights_stationary: bool = False   # PIM: weights never leave the macros
     kv_bytes_per_token_layer: float = 0.0  # set per variant
     extra_kv_write_penalty: float = 0.0    # CWC rewrite energy (ReRAM baseline)
+    # paged serving: chunked prefill writes the prompt's cache payload into
+    # the arena exactly once; amortized here over the generated tokens
+    # (prompt_ctx tokens written per gen_tokens generated). 0 = not modeled —
+    # the pre-serving variants charge decode reads only.
+    prefill_ctx: int = 0
+    gen_tokens: int = 256
+    prefill_write_bytes_per_token_layer: float = 0.0
 
 
 def decode_token_cost(dev: Device, n_params: float, L: int, cfg: TrafficCfg):
@@ -50,7 +57,12 @@ def decode_token_cost(dev: Device, n_params: float, L: int, cfg: TrafficCfg):
     kv_bytes = cfg.kv_bytes_per_token_layer * L * cfg.ctx
     attn_macs = cfg.kv_bytes_per_token_layer / 2 * L * cfg.ctx  # ~1 MAC/elem
     w_bytes = 0.0 if cfg.weights_stationary else 2.0 * n_params / cfg.batch
-    bytes_moved = w_bytes + kv_bytes + cfg.extra_kv_write_penalty
+    # chunked-prefill arena writes: one write per prompt token per layer,
+    # amortized per generated token (matches ContinuousServeEngine's
+    # ``prefill_write_bytes`` accounting)
+    pf_bytes = (cfg.prefill_write_bytes_per_token_layer * L * cfg.prefill_ctx
+                / max(cfg.gen_tokens, 1))
+    bytes_moved = w_bytes + kv_bytes + pf_bytes + cfg.extra_kv_write_penalty
     t = max(2.0 * (macs + attn_macs) / dev.peak_flops,
             bytes_moved / dev.hbm_bw)
     e = (bytes_moved * dev.mem_pj_per_byte + (macs + attn_macs) * dev.mac_pj) * 1e-12
@@ -89,9 +101,15 @@ def main(emit):
             "tpu-v5e-t1t2": (TPU_V5E, TrafficCfg(batch=batch,
                                                  kv_bytes_per_token_layer=kv_x_cpq)),
             # continuous-batching serving: paged dense arena (block-table
-            # overhead included; the serving win is utilization, not bytes)
-            "tpu-v5e-paged": (TPU_V5E, TrafficCfg(batch=batch,
-                                                  kv_bytes_per_token_layer=kv_paged)),
+            # overhead included; the serving win is utilization, not bytes).
+            # Decode reads PLUS the chunked-prefill arena writes: every
+            # prompt token's K/V lands in the pages exactly once (no scratch
+            # cache and no pack re-copy), amortized per generated token —
+            # the serving-level half of the energy story.
+            "tpu-v5e-paged": (TPU_V5E, TrafficCfg(
+                batch=batch, kv_bytes_per_token_layer=kv_paged,
+                prefill_ctx=2048, gen_tokens=256,
+                prefill_write_bytes_per_token_layer=kv_paged)),
         }
         res = {}
         for name, (dev, sc) in variants.items():

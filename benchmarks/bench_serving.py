@@ -9,6 +9,10 @@ capacity as a shared page pool.
 Metrics per arrival rate:
   * token throughput (useful generated tokens per decode step, and per second)
   * mean/p90 completion latency in decode steps (arrival -> last token)
+  * time-to-first-token and inter-token-latency p50/p95 in engine ticks —
+    the head-of-line metrics chunked paged prefill exists to fix: a one-shot
+    admission stalls every running row for the whole prompt's
+    chunk-equivalents, a chunked admission interleaves one chunk per tick
   * arena utilization (valid tokens / provisioned tokens)
 
 The static engine is the paper-baseline batch server: FIFO batches of
@@ -47,9 +51,12 @@ class WorkItem:
 
 def make_workload(seed: int, n_requests: int, vocab: int, rate: float,
                   prompt_lens=(4, 28), short=(2, 9), long=(48, 80),
-                  p_long=0.25) -> list[WorkItem]:
+                  p_long=0.25, long_prompt=(0, 0), p_long_prompt=0.0
+                  ) -> list[WorkItem]:
     """Poisson arrivals; heavy-tailed generation targets (the realistic mixed
-    traffic where static batching pads every row to the batch straggler)."""
+    traffic where static batching pads every row to the batch straggler).
+    ``long_prompt``/``p_long_prompt`` mix in occasional long prompts — the
+    head-of-line hazard that makes monolithic admission stall decode."""
     rng = np.random.default_rng(seed)
     t = 0.0
     out = []
@@ -57,10 +64,12 @@ def make_workload(seed: int, n_requests: int, vocab: int, rate: float,
         t += rng.exponential(1.0 / max(rate, 1e-9))
         tgt = int(rng.integers(*long) if rng.random() < p_long
                   else rng.integers(*short))
+        plen = (int(rng.integers(*long_prompt))
+                if p_long_prompt and rng.random() < p_long_prompt
+                else int(rng.integers(*prompt_lens)))
         out.append(WorkItem(
             rid=i,
-            prompt=rng.integers(0, vocab, size=int(rng.integers(*prompt_lens))
-                                ).astype(np.int32),
+            prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
             target=tgt,
             arrival=t))
     return out
@@ -116,41 +125,76 @@ def run_continuous(cfg, params, work: list[WorkItem], serving: ServingCfg,
     res, stats = eng.serve(reqs, GenerationConfig(max_new_tokens=max(
         w.target for w in work)))
     latencies = [res[w.rid]["done_step"] - w.arrival for w in work]
+    ttfts = [res[w.rid]["first_token_step"] - w.arrival for w in work]
+    itls = np.concatenate(
+        [np.diff(res[w.rid]["token_steps"]) for w in work
+         if len(res[w.rid]["token_steps"]) > 1] or [np.zeros(1)])
     return {
-        "engine": "continuous",
+        "engine": "continuous" + ("-chunked" if eng.chunked else "-oneshot"),
         "useful_tokens": stats["generated_tokens"],
         "waste_tokens": 0,
         "decode_steps": stats["decode_steps"],
         "tokens_per_step": stats["generated_tokens"] / max(stats["decode_steps"], 1),
         "latency_mean": float(np.mean(latencies)),
         "latency_p90": float(np.percentile(latencies, 90)),
+        "ttft_p50": float(np.percentile(ttfts, 50)),
+        "ttft_p95": float(np.percentile(ttfts, 95)),
+        "itl_p50": float(np.percentile(itls, 50)),
+        "itl_p95": float(np.percentile(itls, 95)),
         "arena_utilization": stats["arena_utilization_mean"],
         "wall_time_s": stats["wall_time_s"],
         "tokens_per_s": stats["tokens_per_s"],
         "preemptions": stats["preemptions"],
         "escalations": stats["escalations"],
+        "prefill_chunks": stats["prefill_chunks"],
     }
 
 
-def equal_arena_serving(num_slots: int, max_len: int, page_size: int) -> ServingCfg:
+def equal_arena_serving(num_slots: int, max_len: int, page_size: int,
+                        prefill_chunk: int = 16,
+                        bucket: int | None = None) -> ServingCfg:
     """Page pool with the SAME token capacity the static engine provisions
-    (num_slots contiguous worst-case rows), plus the reserved null page."""
+    (num_slots contiguous worst-case rows), plus the reserved null page.
+    ``prefill_chunk=0`` selects the one-shot admission foil; pass ``bucket``
+    = the chunked config's chunk size so both engines charge prefill work at
+    the same clock quantum (fair ITL comparison)."""
     return ServingCfg(
         num_slots=num_slots,
         page_size=page_size,
         num_pages=num_slots * pages_needed(max_len, page_size) + 1,
         max_blocks_per_slot=pages_needed(max_len, page_size),
-        prefill_bucket=page_size)
+        prefill_bucket=bucket or prefill_chunk or page_size,
+        prefill_chunk=prefill_chunk)
 
 
 def compare(cfg, params, *, rate: float, n_requests: int, num_slots: int,
-            seed: int = 0, mode_rt=None):
-    work = make_workload(seed, n_requests, cfg.vocab_size, rate)
+            seed: int = 0, mode_rt=None, prefill_chunk: int = 16,
+            long_prompts: bool = False):
+    kw = dict(long_prompt=(40, 72), p_long_prompt=0.3) if long_prompts else {}
+    work = make_workload(seed, n_requests, cfg.vocab_size, rate, **kw)
     max_len = max(len(w.prompt) + w.target for w in work)
-    serving = equal_arena_serving(num_slots, max_len, page_size=8)
+    serving = equal_arena_serving(num_slots, max_len, page_size=8,
+                                  prefill_chunk=prefill_chunk)
     st = run_static(cfg, params, work, num_slots, max_len, mode_rt)
     ct = run_continuous(cfg, params, work, serving, mode_rt)
     return st, ct
+
+
+def compare_admission(cfg, params, *, rate: float, n_requests: int,
+                      num_slots: int, seed: int = 0, prefill_chunk: int = 16):
+    """Chunked vs one-shot admission on the SAME long-prompt Poisson workload
+    at equal arena bytes: the interleaving win shows up as lower tail
+    inter-token latency (p95 ITL) for the rows that keep decoding while a
+    long prompt streams in."""
+    work = make_workload(seed, n_requests, cfg.vocab_size, rate,
+                         long_prompt=(40, 72), p_long_prompt=0.3)
+    max_len = max(len(w.prompt) + w.target for w in work)
+    chunked = run_continuous(cfg, params, work, equal_arena_serving(
+        num_slots, max_len, page_size=8, prefill_chunk=prefill_chunk))
+    oneshot = run_continuous(cfg, params, work, equal_arena_serving(
+        num_slots, max_len, page_size=8, prefill_chunk=0,
+        bucket=prefill_chunk))
+    return chunked, oneshot
 
 
 def paged_decode_step_latency(cfg, params, serving: ServingCfg, *,
@@ -211,13 +255,31 @@ def main(emit, smoke: bool = False):
         ratio = ct["tokens_per_step"] / max(st["tokens_per_step"], 1e-9)
         worst = ratio if worst == 0 else min(worst, ratio)
         for r in (st, ct):
+            lat = ""
+            if "itl_p95" in r:
+                lat = (f";ttft_p50={r['ttft_p50']:.1f};ttft_p95={r['ttft_p95']:.1f}"
+                       f";itl_p50={r['itl_p50']:.1f};itl_p95={r['itl_p95']:.1f}")
             emit(f"serving_rate{rate}_{r['engine']}", r["wall_time_s"] * 1e6,
                  f"tok_per_step={r['tokens_per_step']:.2f};"
                  f"tok_per_s={r['tokens_per_s']:.1f};"
                  f"lat_mean={r['latency_mean']:.1f};lat_p90={r['latency_p90']:.1f};"
-                 f"arena_util={r['arena_utilization']:.3f}")
+                 f"arena_util={r['arena_utilization']:.3f}" + lat)
         emit(f"serving_rate{rate}_speedup", 0.0,
              f"continuous_vs_static={ratio:.2f}x (target >= 1.5x)")
+
+    # chunked vs one-shot admission on long-prompt traffic at equal arena
+    # bytes and equal clock quantum — the head-of-line removal measurement
+    chunked, oneshot = compare_admission(cfg, params, rate=1.0,
+                                         n_requests=n_requests, num_slots=4)
+    for r in (chunked, oneshot):
+        emit(f"serving_admission_{r['engine']}", r["wall_time_s"] * 1e6,
+             f"tok_per_step={r['tokens_per_step']:.2f};"
+             f"ttft_p50={r['ttft_p50']:.1f};ttft_p95={r['ttft_p95']:.1f};"
+             f"itl_p50={r['itl_p50']:.1f};itl_p95={r['itl_p95']:.1f};"
+             f"chunks={r['prefill_chunks']}")
+    emit("serving_admission_itl", 0.0,
+         f"chunked_vs_oneshot_p95_itl={chunked['itl_p95']:.1f}/"
+         f"{oneshot['itl_p95']:.1f} (target <=)")
 
     # per-step decode latency with/without the fused paged kernels at equal
     # arena bytes — the gather-overhead-removal measurement
@@ -232,6 +294,13 @@ def main(emit, smoke: bool = False):
     if smoke:
         assert worst >= 1.5, (
             f"continuous batching speedup {worst:.2f}x < 1.5x acceptance floor")
+        # chunked admission must improve the decode tail (p95 ITL) on the
+        # mixed-length Poisson workload — the interleave is the whole point
+        assert chunked["itl_p95"] <= oneshot["itl_p95"], (
+            f"chunked p95 ITL {chunked['itl_p95']:.1f} worse than one-shot "
+            f"{oneshot['itl_p95']:.1f}")
+        emit("serving_admission_smoke", 0.0,
+             f"PASS itl_p95 {chunked['itl_p95']:.1f} <= {oneshot['itl_p95']:.1f}")
         if not K.INTERPRET:
             # compiled kernels: fused decode must not be slower than
             # materializing the logical views (small timer slack)

@@ -120,6 +120,12 @@ class ServingCfg:
     critical_watermark: float = 0.10
     enable_escalation: bool = False
     prefill_bucket: int = 16       # prompts padded up to a multiple of this
+    # chunked paged prefill (the DEFAULT admission path): prompts stream into
+    # their slot's arena pages in page-aligned chunks of this many tokens,
+    # at most one chunk interleaved per decode step — no contiguous scratch
+    # prefill cache, no monolithic admission stall. 0 restores the one-shot
+    # B=1 prefill + pack path (the construction-exact admission oracle).
+    prefill_chunk: int = 16
     # fused paged-attention decode kernels: None defers to the engine's
     # AttentionRuntime.paged_kernels (default on); True/False overrides it
     use_paged_kernels: Optional[bool] = None
@@ -129,6 +135,11 @@ class ServingCfg:
         assert self.page_size >= 1 and self.num_slots >= 1
         assert 0.0 <= self.critical_watermark <= self.low_watermark <= 1.0
         assert self.prefill_bucket >= 1
+        assert self.prefill_chunk >= 0
+        if self.prefill_chunk:
+            assert self.prefill_chunk % self.page_size == 0, (
+                "prefill_chunk must be page-aligned "
+                f"({self.prefill_chunk} % {self.page_size} != 0)")
 
     @property
     def max_len(self) -> int:

@@ -196,6 +196,77 @@ def cpq_encode_token(scale: jax.Array, zero: jax.Array, num_levels: jax.Array,
     return code_t, new_idx.astype(jnp.int32), scale2, zero2, num_levels2
 
 
+def cpq_fit_chunk(x: jax.Array, valid: jax.Array, cfg: CPQCfg):
+    """Level-0 fit over the first ``valid`` tokens of a prompt chunk (chunked
+    paged-prefill admission: the FIRST chunk plays the role the whole prompt
+    plays in ``cpq_compress_prefill``, with the chunk's jit padding excluded
+    from every statistic).
+
+    x: (B, C, H, D); valid: () int32 in [1, C]. Returns
+    (codes (B,C,H,D) i8, level (B,C,H) i32, scale (B,L,H,D), zero, num_levels
+    (B,H), prune_thr (B,H,D)) — codes/levels of padding positions are
+    garbage; callers route them to the null page.
+    """
+    B, C, H, D = x.shape
+    xf = x.astype(jnp.float32)
+    ok = (jnp.arange(C, dtype=jnp.int32) < valid)[None, :, None, None]
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, jnp.float32)
+
+    # masked per-channel magnitude quantile (linear interpolation over the
+    # valid prefix — invalid slots sort to the end and are never indexed)
+    xs = jnp.sort(jnp.where(ok, jnp.abs(xf), big), axis=1)
+    pos = cfg.prune_ratio * (valid - 1).astype(jnp.float32)
+    lo_i = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, C - 1)
+    hi_i = jnp.clip(lo_i + 1, 0, C - 1)
+    frac = pos - lo_i.astype(jnp.float32)
+    q_lo = jax.lax.dynamic_index_in_dim(xs, lo_i, axis=1, keepdims=False)
+    q_hi = jax.lax.dynamic_index_in_dim(xs, hi_i, axis=1, keepdims=False)
+    q_hi = jnp.where(hi_i < valid, q_hi, q_lo)  # never interpolate into padding
+    thr = q_lo * (1.0 - frac) + q_hi * frac                     # (B, H, D)
+
+    mask = cpq_prune_mask(x, thr[:, None]) & ok
+    scale0, zero0 = _fit_level(x, mask, cfg.bits)               # (B, H, D)
+    codes = _encode(x, mask, scale0[:, None], zero0[:, None], cfg.bits)
+
+    L = cfg.max_levels
+    scale = jnp.zeros((B, L, H, D), jnp.float32).at[:, 0].set(scale0)
+    zero = jnp.zeros((B, L, H, D), jnp.float32).at[:, 0].set(zero0)
+    level = jnp.zeros((B, C, H), jnp.int32)
+    num_levels = jnp.ones((B, H), jnp.int32)
+    return codes, level, scale, zero, num_levels, thr
+
+
+def cpq_encode_chunk(scale: jax.Array, zero: jax.Array, num_levels: jax.Array,
+                     prune_thr: jax.Array, x: jax.Array, valid: jax.Array,
+                     cfg: CPQCfg):
+    """HQE-encode a continuation chunk token by token (a scan of
+    ``cpq_encode_token``): every valid token is quantized exactly once with
+    the side state as of its turn — identical semantics to decode-time
+    appends, so chunked prefill and decode share one compression story.
+    Padding tokens (index >= ``valid``) neither commit side-state updates nor
+    spawn levels; their codes are garbage routed to the null page.
+
+    x: (B, C, H, D); valid: () int32. Returns (codes (B,C,H,D) i8,
+    level (B,C,H) i32, scale', zero', num_levels')."""
+    B, C, H, D = x.shape
+
+    def step(carry, inp):
+        s, z, nl = carry
+        x_t, i = inp                                 # x_t: (B, H, D)
+        code_t, lvl_t, s2, z2, nl2 = cpq_encode_token(
+            s, z, nl, prune_thr, x_t[:, None], cfg)
+        upd = i < valid
+        s, z, nl = jax.tree.map(
+            lambda new, old: jnp.where(upd, new, old), (s2, z2, nl2), (s, z, nl))
+        return (s, z, nl), (code_t[:, 0], lvl_t)
+
+    (scale, zero, num_levels), (codes, level) = jax.lax.scan(
+        step, (scale, zero, num_levels),
+        (x.swapaxes(0, 1), jnp.arange(C, dtype=jnp.int32)))
+    return (codes.swapaxes(0, 1), level.swapaxes(0, 1),
+            scale, zero, num_levels)
+
+
 def cpq_append_decode(t: CPQTensor, x_t: jax.Array, pos: jax.Array, cfg: CPQCfg) -> CPQTensor:
     """HQE append of one token to the contiguous arena. x_t: (B, 1, H, D);
     pos: () int32 write slot. See ``cpq_encode_token`` for the HQE math."""

@@ -34,6 +34,19 @@ without issuing MXU work, and a row with lengths[b] == 0 returns zeros.
 when ``AttentionRuntime.paged_kernels`` is set (retrieval T3 keeps the
 gather for its top-k slot selection).
 
+Paged prefill entry points (chunked admission)
+----------------------------------------------
+The ``paged_*_prefill_*`` variants generalize the decode kernels to
+Q-chunk>1: the C queries of one admission chunk sweep ONE slot's
+block-table row with an additional per-query-row causal mask (query i sits
+at absolute position ``offset + i``; positions past ``offset + valid`` are
+the chunk's jit padding). The chunk's own payload is written into the pages
+first, so the same sweep serves intra-chunk causal attention — serving
+admission never materializes a contiguous scratch cache. The CPQ variant
+adds one extra grid step that attends the chunk's RAW roped K/V causally
+(earlier pages are dequantized in VMEM, reading exactly what decode reads).
+``chunk_attend_paged`` in serving/paged_cache.py is the dispatch.
+
 INTERPRET
 ---------
 Kernels TARGET TPU v5e (128-aligned MXU tiles, VMEM-resident accumulators)

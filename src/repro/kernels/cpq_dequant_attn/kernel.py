@@ -139,6 +139,145 @@ def _paged_kernel(bt_ref, len_ref, q_ref, ck_ref, cv_ref, sk_ref, zk_ref,
         o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(bt_ref, lens_ref, q_ref, ck_ref, cv_ref, sk_ref,
+                          zk_ref, sv_ref, zv_ref, lvk_ref, lvv_ref, kraw_ref,
+                          vraw_ref, o_ref, m_sc, l_sc, acc_sc, *, scale: float,
+                          page_size: int, nb: int, num_levels: int, group: int,
+                          chunk: int):
+    """One (kv, ib) step of the Q-chunk>1 paged T2 prefill sweep for the slot
+    being admitted. Grid steps ib < nb dequantize the slot's EARLIER code
+    pages (positions < offset — cross-chunk keys read exactly what decode
+    will read); the extra final step ib == nb attends the chunk's RAW roped
+    K/V tile causally, so a single-chunk admission reproduces the one-shot
+    prefill's raw-attention numerics bit-for-bit. lens = (offset, valid)."""
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    def online(s, v_tile):
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v_tile, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    # earlier-chunk pages: dequantize in VMEM, positions >= offset are dead
+    # (the current chunk's keys are served raw by the final grid step)
+    @pl.when((ib < nb) & (ib * page_size < lens_ref[0]))
+    def _pages():
+        q = q_ref[0, 0].astype(jnp.float32)              # (C*G, Dh)
+        ck = ck_ref[0, :, 0, :]                          # (page, Dh) i8
+        cv = cv_ref[0, :, 0, :]                          # (page, Dv) i8
+
+        def onehot(lv):
+            return (lv[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (lv.shape[0], num_levels), 1)).astype(jnp.float32)
+
+        def dequant(codes, lv_oh, s_ref, z_ref):
+            # bf16 rounding matches the jnp gather path (see _paged_kernel)
+            return _dequant(codes, lv_oh, s_ref, z_ref).astype(
+                jnp.bfloat16).astype(jnp.float32)
+
+        k_hat = dequant(ck, onehot(lvk_ref[0, :, 0]), sk_ref, zk_ref)
+        s = jax.lax.dot_general(q, k_hat, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = ib * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < lens_ref[0], s, NEG_INF)     # earlier tokens only
+        online(s, dequant(cv, onehot(lvv_ref[0, :, 0]), sv_ref, zv_ref))
+
+    # final step: the chunk's raw roped K/V, causal within the chunk
+    @pl.when(ib == nb)
+    def _raw_tail():
+        q = q_ref[0, 0].astype(jnp.float32)              # (C*G, Dh)
+        k = kraw_ref[:, 0, :].astype(jnp.float32)        # (C, Dh)
+        v = vraw_ref[:, 0, :].astype(jnp.float32)        # (C, Dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qtok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        ok = (col < lens_ref[1]) & (col <= qtok)         # valid & causal
+        s = jnp.where(ok, s, NEG_INF)
+        online(s, v)
+        o_ref[0, 0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+def paged_cpq_prefill_fwd(q, codes_k, codes_v, scale_k, zero_k, scale_v,
+                          zero_v, level_k, level_v, k_raw, v_raw, block_row,
+                          offset, valid, *, scale: float,
+                          interpret: bool = True):
+    """Chunked paged T2 prefill for one slot: the admission chunk's C queries
+    attend the slot's earlier code/level pages (dequantized in VMEM — HBM
+    moves only compressed bytes) plus the chunk's raw roped K/V causally.
+    No contiguous scratch cache and no logical CPQ view is materialized.
+
+    q: (1, KV, C*G, Dh) token-major rows (row r = chunk token r // G);
+    codes_*/level_*: (P, page, KV, D*) i8 / (P, page, KV) i32 pools;
+    scale_/zero_*: (1, L, KV, D*) f32 HQE side state of THIS slot;
+    k_raw/v_raw: (C, KV, Dh|Dv) the chunk's raw roped keys/values;
+    block_row: (max_blocks,) int32 (0 = null page); offset/valid: () int32.
+    Returns (1, KV, C*G, Dv) f32; rows past ``valid`` are jit-padding
+    garbage."""
+    _, KV, CG, Dh = q.shape
+    C = k_raw.shape[0]
+    G = CG // C
+    page = codes_k.shape[1]
+    Dv = codes_v.shape[-1]
+    L = scale_k.shape[1]
+    nb = block_row.shape[0]
+    lens = jnp.stack([offset, valid]).astype(jnp.int32)
+
+    kern = functools.partial(_paged_prefill_kernel, scale=scale,
+                             page_size=page, nb=nb, num_levels=L, group=G,
+                             chunk=C)
+    # page index maps clamp ib to nb-1 so the extra raw-tail grid step keeps
+    # well-formed (dummy) page operands
+    pg = lambda ib, bt: bt[jnp.minimum(ib, nb - 1)]  # noqa: E731
+    return pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_row, (offset, valid)
+            grid=(KV, nb + 1),      # block-table sweep + raw-chunk tail
+            in_specs=[
+                pl.BlockSpec((1, 1, CG, Dh), lambda kv, ib, bt, ln: (0, kv, 0, 0)),
+                pl.BlockSpec((1, page, 1, Dh),
+                             lambda kv, ib, bt, ln: (pg(ib, bt), 0, kv, 0)),
+                pl.BlockSpec((1, page, 1, Dv),
+                             lambda kv, ib, bt, ln: (pg(ib, bt), 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dh), lambda kv, ib, bt, ln: (0, 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dh), lambda kv, ib, bt, ln: (0, 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dv), lambda kv, ib, bt, ln: (0, 0, kv, 0)),
+                pl.BlockSpec((1, L, 1, Dv), lambda kv, ib, bt, ln: (0, 0, kv, 0)),
+                pl.BlockSpec((1, page, 1),
+                             lambda kv, ib, bt, ln: (pg(ib, bt), 0, kv)),
+                pl.BlockSpec((1, page, 1),
+                             lambda kv, ib, bt, ln: (pg(ib, bt), 0, kv)),
+                pl.BlockSpec((C, 1, Dh), lambda kv, ib, bt, ln: (0, kv, 0)),
+                pl.BlockSpec((C, 1, Dv), lambda kv, ib, bt, ln: (0, kv, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, CG, Dv),
+                                   lambda kv, ib, bt, ln: (0, kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((CG, 1), jnp.float32),
+                pltpu.VMEM((CG, 1), jnp.float32),
+                pltpu.VMEM((CG, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, KV, CG, Dv), jnp.float32),
+        interpret=interpret,
+    )(block_row.astype(jnp.int32), lens,
+      q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
+      level_k.astype(jnp.int32), level_v.astype(jnp.int32), k_raw, v_raw)
+
+
 def paged_cpq_decode_fwd(q, codes_k, codes_v, scale_k, zero_k, scale_v, zero_v,
                          level_k, level_v, block_table, lengths, *,
                          scale: float, interpret: bool = True):

@@ -9,7 +9,8 @@ import jax.numpy as jnp
 from repro import kernels as K
 from repro.core.kv_cache import CPQKVCache
 from repro.kernels.cpq_dequant_attn.kernel import (cpq_decode_fwd,
-                                                   paged_cpq_decode_fwd)
+                                                   paged_cpq_decode_fwd,
+                                                   paged_cpq_prefill_fwd)
 
 
 @partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
@@ -28,6 +29,32 @@ def cpq_decode_tpu(q, cache: CPQKVCache, scale: float, block_n: int = 512,
         cache.k.level, cache.v.level, cache.length, scale=scale,
         block_n=block_n, interpret=interpret)
     return out.reshape(B, 1, H, -1).astype(q.dtype)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_cpq_prefill_tpu(q, kt, vt, k_raw, v_raw, slot, block_row, offset,
+                          valid, scale: float, interpret: bool | None = None):
+    """Chunked paged T2 prefill for one slot: the admission chunk's C queries
+    attend the slot's earlier code/level pages (in-VMEM dequant) plus the
+    chunk's raw roped K/V causally. q: (1, C, H, Dh) roped chunk queries;
+    kt/vt: PagedCPQTensor arenas; k_raw/v_raw: (1, C, KV, Dh|Dv);
+    slot/offset/valid: () int32; block_row: (max_blocks,) int32.
+    -> (1, C, H, Dv); rows past ``valid`` are jit-padding garbage."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    _, C, H, Dh = q.shape
+    KV = kt.codes.shape[2]
+    g = H // KV
+    # (1, KV, C*G, Dh), token-major rows within each kv head
+    qg = q[0].reshape(C, KV, g, Dh).transpose(1, 0, 2, 3).reshape(1, KV, C * g, Dh)
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)  # noqa: E731
+    out = paged_cpq_prefill_fwd(
+        qg, kt.codes, vt.codes, sl(kt.scale), sl(kt.zero), sl(vt.scale),
+        sl(vt.zero), kt.level, vt.level, k_raw[0], v_raw[0], block_row,
+        offset, valid, scale=scale, interpret=interpret)
+    Dv = out.shape[-1]
+    return (out.reshape(KV, C, g, Dv).transpose(1, 0, 2, 3)
+            .reshape(1, C, H, Dv).astype(q.dtype))
 
 
 @partial(jax.jit, static_argnames=("scale", "interpret"))

@@ -126,6 +126,121 @@ def _paged_kernel(bt_ref, len_ref, r_ref, qr_ref, x_ref, kr_ref, p_ref,
         p_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(p_ref.dtype)
 
 
+def _paged_prefill_kernel(bt_ref, lens_ref, r_ref, qr_ref, x_ref, kr_ref, p_ref,
+                          m_sc, l_sc, acc_sc, *, scale: float, page_size: int,
+                          nb: int, rope_dims: int, kv_r: int, chunk: int):
+    """One ib step of the Q-chunk>1 paged decomposed sweep for ONE slot being
+    admitted: both cascaded MatMuls consume physical X page bt[ib] on one
+    read. Query rows are HEAD-MAJOR (row = h * C + i) so the per-kv-head rope
+    slices stay contiguous; row r is chunk token r % C at absolute position
+    lens[0] + r % C; lens[1] = offset + valid masks the chunk's jit padding."""
+    ib = pl.program_id(0)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # pages wholly past the slot's post-chunk length are unmapped: skip
+    @pl.when(ib * page_size < lens_ref[1])
+    def _compute():
+        r = r_ref[0].astype(jnp.float32)           # (H*C, Dm)
+        x = x_ref[0].astype(jnp.float32)           # (page, Dm)
+        # --- score stage: s = R X^T on the in-VMEM page
+        s = jax.lax.dot_general(r, x, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (H*C, page)
+        if rope_dims > 0:
+            HC = r.shape[0]
+            g_r = HC // (kv_r * chunk)             # heads per kv_r, in rows of C
+            rope_rows = []
+            for j in range(kv_r):   # static, tiny: per-kv-head rope slice
+                qj = qr_ref[0, j * g_r * chunk:(j + 1) * g_r * chunk, :].astype(
+                    jnp.float32)
+                kj = kr_ref[0, :, j, :].astype(jnp.float32)   # (page, Rr)
+                rope_rows.append(jax.lax.dot_general(
+                    qj, kj, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32))
+            s = s + jnp.concatenate(rope_rows, axis=0)
+        s = s * scale
+        pos = ib * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qtok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % chunk
+        ok = (pos < lens_ref[1]) & (pos <= lens_ref[0] + qtok)  # valid & causal
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        # --- value stage: P += p X, same page still in VMEM
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, x, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        p_ref[0] = (acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(p_ref.dtype)
+
+
+def paged_decomposed_prefill_fwd(r: jax.Array, q_rope: jax.Array,
+                                 x_pages: jax.Array, kr_pages: jax.Array,
+                                 block_row: jax.Array, offset: jax.Array,
+                                 valid: jax.Array, *, scale: float,
+                                 interpret: bool = True) -> jax.Array:
+    """Chunked paged T1/MLA prefill for one slot: the admission chunk's C
+    queries sweep the slot's X (+roped key) pages [0, offset + valid) — the
+    chunk's own X rows were just written into those pages, so the decomposed
+    score/value stages serve intra-chunk causal attention too and no
+    contiguous scratch cache exists.
+
+    r: (C, H, Dm) = q_nope W_K^T; q_rope: (C, H, Rr) (Rr may be 0);
+    x_pages: (P, page, Dm); kr_pages: (P, page, KV_r, Rr), KV_r == 1 for the
+    MLA shared rope; block_row: (max_blocks,) int32 (0 = null page);
+    offset/valid: () int32. Returns P: (C, H, Dm) — caller applies W_V; rows
+    past ``valid`` are jit-padding garbage."""
+    C, H, Dm = r.shape
+    page = x_pages.shape[1]
+    Rr = q_rope.shape[-1]
+    kv_r = kr_pages.shape[2] if Rr else 1
+    nb = block_row.shape[0]
+    if not Rr:  # keep a well-formed (non-0-width) operand for the BlockSpec
+        q_rope = jnp.zeros((C, H, 1), r.dtype)
+        kr_pages = jnp.zeros((x_pages.shape[0], page, 1, 1), x_pages.dtype)
+    Rp = q_rope.shape[-1]
+    # head-major rows (h * C + i): kv_r slices contiguous, token = row % C
+    r2 = r.transpose(1, 0, 2).reshape(1, H * C, Dm)
+    qr2 = q_rope.transpose(1, 0, 2).reshape(1, H * C, Rp)
+    lens = jnp.stack([offset, offset + valid]).astype(jnp.int32)
+
+    kern = functools.partial(_paged_prefill_kernel, scale=scale, page_size=page,
+                             nb=nb, rope_dims=Rr, kv_r=kv_r, chunk=C)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_row, (offset, total)
+            grid=(nb,),             # sweeps the slot's block-table entries
+            in_specs=[
+                pl.BlockSpec((1, H * C, Dm), lambda ib, bt, ln: (0, 0, 0)),
+                pl.BlockSpec((1, H * C, Rp), lambda ib, bt, ln: (0, 0, 0)),
+                pl.BlockSpec((1, page, Dm), lambda ib, bt, ln: (bt[ib], 0, 0)),
+                pl.BlockSpec((1, page, kv_r, Rp),
+                             lambda ib, bt, ln: (bt[ib], 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H * C, Dm), lambda ib, bt, ln: (0, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((H * C, 1), jnp.float32),
+                pltpu.VMEM((H * C, 1), jnp.float32),
+                pltpu.VMEM((H * C, Dm), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((1, H * C, Dm), x_pages.dtype),
+        interpret=interpret,
+    )(block_row.astype(jnp.int32), lens, r2, qr2, x_pages, kr_pages)
+    return out.reshape(H, C, Dm).transpose(1, 0, 2)
+
+
 def paged_decomposed_decode_fwd(r: jax.Array, q_rope: jax.Array,
                                 x_pages: jax.Array, kr_pages: jax.Array,
                                 block_table: jax.Array, lengths: jax.Array, *,

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro import kernels as K
 from repro.kernels.decomposed_attn.kernel import (decomposed_decode_fwd,
-                                                  paged_decomposed_decode_fwd)
+                                                  paged_decomposed_decode_fwd,
+                                                  paged_decomposed_prefill_fwd)
 
 
 @partial(jax.jit, static_argnames=("scale", "block_n", "interpret"))
@@ -47,6 +48,40 @@ def decomposed_decode_tpu(q_nope, q_rope, x_cache, k_rope, w_k_nope, w_v,
     pg = p.reshape(B, KV, g, Dm)
     out = jnp.einsum("bkgm,mkd->bkgd", pg, w_v).reshape(B, 1, H, Dv)
     return out
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decomposed_prefill_tpu(q_nope, q_rope, x_pages, kr_pages,
+                                 block_row, offset, valid, w_k_nope, w_v,
+                                 scale: float, interpret: bool | None = None):
+    """Chunked paged T1/MLA prefill for one slot: the admission chunk's C
+    queries attend the slot's X (+roped key) pages [0, offset + valid)
+    through its block-table row (the chunk's X rows already live in those
+    pages). q_nope: (1, C, H, Dn); q_rope: (1, C, H, Rr) or None/Rr == 0;
+    block_row: (max_blocks,) int32 (0 = null page); offset/valid: () int32;
+    w_k_nope: (Dm, KV, Dn); w_v: (Dm, KV, Dv). -> (1, C, H, Dv); rows past
+    ``valid`` are jit-padding garbage."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    _, C, H, Dn = q_nope.shape
+    Dm = x_pages.shape[-1]
+    KV, Dv = w_v.shape[1], w_v.shape[2]
+    g = H // KV
+
+    # R = q W_K^T  (first cascaded MatMul — tiny for a chunk)
+    qg = q_nope[0].reshape(C, KV, g, Dn)
+    r = jnp.einsum("ckgd,mkd->ckgm", qg, w_k_nope).reshape(C, H, Dm)
+
+    qr = q_rope[0] if q_rope is not None and q_rope.shape[-1] > 0 \
+        else jnp.zeros((C, H, 0), x_pages.dtype)
+
+    p = paged_decomposed_prefill_fwd(
+        r.astype(x_pages.dtype), qr.astype(x_pages.dtype), x_pages, kr_pages,
+        block_row, offset, valid, scale=scale, interpret=interpret)
+
+    # out = P W_V  (second tiny dense MatMul)
+    pg = p.reshape(C, KV, g, Dm)
+    return jnp.einsum("ckgm,mkd->ckgd", pg, w_v).reshape(1, C, H, Dv)
 
 
 @partial(jax.jit, static_argnames=("scale", "interpret"))

@@ -120,6 +120,106 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
             acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_prefill_kernel(bt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                          m_sc, l_sc, acc_sc, *, scale: float, page_size: int,
+                          nb: int, group: int):
+    """One (kv, ib) step of the Q-chunk>1 paged prefill sweep: queries are the
+    admission chunk's C tokens (flattened (C*G) rows per kv head), the K/V
+    tile IS physical page bt[ib] of the slot being admitted. lens holds
+    (offset, total): ``offset`` tokens preceded this chunk, ``total`` =
+    offset + valid masks the chunk's jit padding. Causal masking is per query
+    ROW: row r is chunk token r // G at absolute position offset + r // G."""
+    ib = pl.program_id(1)
+
+    @pl.when(ib == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    # pages wholly past the row's post-chunk length are unmapped: skip
+    @pl.when(ib * page_size < lens_ref[1])
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)           # (C*G, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page, Dh)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)  # (page, Dv)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale          # (C*G, page)
+        pos = ib * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        qtok = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        ok = (pos < lens_ref[1]) & (pos <= lens_ref[0] + qtok)   # valid & causal
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_sc[...] = l_sc[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_sc[...] = m_new
+        acc_sc[...] = acc_sc[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ib == nb - 1)
+    def _finish():
+        o_ref[0] = (
+            acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_prefill_fwd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                            block_row: jax.Array, offset: jax.Array,
+                            valid: jax.Array, *, scale: float,
+                            interpret: bool = True) -> jax.Array:
+    """Chunked paged prefill attention for ONE request slot: the chunk's C
+    queries attend over the slot's pages [0, offset + valid) — the chunk's own
+    K/V were just written into those pages, so no contiguous scratch cache
+    exists. Same scalar-prefetch construction as the decode kernel, with a
+    per-query-row causal mask (query i sits at absolute position offset + i).
+
+    q: (1, C, H, Dh); k_pages/v_pages: (P, page, KV, Dh|Dv) pools;
+    block_row: (max_blocks,) int32 (0 = null page); offset/valid: () int32 —
+    tokens already in the slot before this chunk / real tokens in this chunk
+    (the tail up to C is jit padding whose output is garbage).
+    Returns (1, C, H, Dv)."""
+    _, C, H, Dh = q.shape
+    page = k_pages.shape[1]
+    KV = k_pages.shape[2]
+    Dv = v_pages.shape[-1]
+    g = H // KV
+    nb = block_row.shape[0]
+    # (KV, C*G, Dh), token-major rows within each kv head: row r = token r // g
+    qg = q[0].reshape(C, KV, g, Dh).transpose(1, 0, 2, 3).reshape(KV, C * g, Dh)
+    lens = jnp.stack([offset, offset + valid]).astype(jnp.int32)
+
+    kern = functools.partial(_paged_prefill_kernel, scale=scale,
+                             page_size=page, nb=nb, group=g)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # block_row, (offset, total)
+            grid=(KV, nb),          # innermost axis sweeps block-table entries
+            in_specs=[
+                pl.BlockSpec((1, C * g, Dh), lambda kv, ib, bt, ln: (kv, 0, 0)),
+                pl.BlockSpec((1, page, 1, Dh),
+                             lambda kv, ib, bt, ln: (bt[ib], 0, kv, 0)),
+                pl.BlockSpec((1, page, 1, Dv),
+                             lambda kv, ib, bt, ln: (bt[ib], 0, kv, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, C * g, Dv),
+                                   lambda kv, ib, bt, ln: (kv, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((C * g, 1), jnp.float32),
+                pltpu.VMEM((C * g, 1), jnp.float32),
+                pltpu.VMEM((C * g, Dv), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((KV, C * g, Dv), q.dtype),
+        interpret=interpret,
+    )(block_row.astype(jnp.int32), lens, qg, k_pages, v_pages)
+    return out.reshape(KV, C, g, Dv).transpose(1, 0, 2, 3).reshape(1, C, H, Dv)
+
+
 def paged_flash_decode_fwd(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                            block_table: jax.Array, lengths: jax.Array, *,
                            scale: float, interpret: bool = True) -> jax.Array:

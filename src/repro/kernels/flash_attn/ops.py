@@ -7,7 +7,8 @@ import jax
 
 from repro import kernels as K
 from repro.kernels.flash_attn.kernel import (flash_attention_fwd,
-                                             paged_flash_decode_fwd)
+                                             paged_flash_decode_fwd,
+                                             paged_flash_prefill_fwd)
 
 
 @partial(jax.jit, static_argnames=("scale", "causal", "block_q", "block_k",
@@ -20,6 +21,20 @@ def flash_attention_tpu(q, k, v, scale: float, causal: bool = True,
     return flash_attention_fwd(q, k, v, scale=scale, causal=causal,
                                block_q=block_q, block_k=block_k,
                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_flash_prefill_tpu(q, k_pages, v_pages, block_row, offset, valid,
+                            scale: float, interpret: bool | None = None):
+    """Chunked paged prefill for one slot: the admission chunk's C queries
+    attend the slot's pages [0, offset + valid) through its block-table row
+    (the chunk's K/V already live in those pages). q: (1, C, H, Dh);
+    block_row: (max_blocks,) int32 (0 = null page); offset/valid: () int32.
+    -> (1, C, H, Dv); rows past ``valid`` are jit-padding garbage."""
+    if interpret is None:
+        interpret = K.INTERPRET
+    return paged_flash_prefill_fwd(q, k_pages, v_pages, block_row, offset,
+                                   valid, scale=scale, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("scale", "interpret"))

@@ -35,6 +35,10 @@ def main(argv=None):
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching engine over paged arenas "
                          "(token prompts only)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="chunked paged prefill: prompts stream into arena "
+                         "pages in chunks of this many tokens, interleaved "
+                         "with decode (page-aligned; 0 = one-shot admission)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -59,8 +63,11 @@ def main(argv=None):
         serving = ServingCfg(
             num_slots=args.batch, page_size=16,
             num_pages=args.batch * pages_needed(n_max, 16) + 1,
-            max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16)
+            max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16,
+            prefill_chunk=args.prefill_chunk)
         eng = ContinuousServeEngine(cfg, params, serving=serving)
+        print(f"[serve] chunked prefill: "
+              f"{'on, chunk=' + str(args.prefill_chunk) if eng.chunked else 'off (one-shot admission)'}")
     else:
         eng = ServeEngine(cfg, params, max_len=args.prompt + args.new)
     gen = GenerationConfig(max_new_tokens=args.new, temperature=args.temperature,

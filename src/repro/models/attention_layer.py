@@ -212,6 +212,37 @@ def attn_decode(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
     return _out(cfg, p, out), cache
 
 
+def attn_prefill_chunk(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
+                       first: bool, p, x: jax.Array, positions: jax.Array,
+                       slot, block_row, offset, valid, cache):
+    """Chunked paged prefill: one prompt chunk's K/V (or X / CPQ codes) is
+    written straight into slot ``slot``'s arena pages and its C queries
+    attend the slot's pages [0, offset + valid) — the streaming admission
+    path (no contiguous scratch cache). x: (1, C, D) normed block input at
+    absolute ``positions``; ``tier``/``first`` are host-static."""
+    from repro.serving import paged_cache as pgc
+
+    q, k, v = _project_qkv(cfg, p, x)
+    r = decoupled_rope_dims(cfg)
+
+    if rt.mode in ("decomposed", "decomposed_cpq"):
+        q, k = _rope_qk(cfg, q, k, positions, positions, dims=r)
+        wk_nope, wv, _ = _wk_wv_heads(cfg, p)
+        out, cache = pgc.chunk_attend_paged(
+            rt, cache, tier=tier, first=first, slot=slot, block_row=block_row,
+            offset=offset, valid=valid, q=q, k_c=k, v_c=v, x_c=x,
+            k_rope_c=k[..., :r], q_nope=q[..., r:], q_rope=q[..., :r],
+            w_k_nope=wk_nope, w_v=wv, scale=_scale(cfg))
+    else:
+        q, k = _rope_qk(cfg, q, k, positions, positions)
+        out, cache = pgc.chunk_attend_paged(
+            rt, cache, tier=tier, first=first, slot=slot, block_row=block_row,
+            offset=offset, valid=valid, q=q, k_c=k, v_c=v, x_c=None,
+            k_rope_c=None, q_nope=None, q_rope=None, w_k_nope=None, w_v=None,
+            scale=_scale(cfg))
+    return _out(cfg, p, out), cache
+
+
 def init_paged_attn_cache(cfg: ModelConfig, rt: AttentionRuntime, serving,
                           tiered: bool = False):
     """Per-layer paged arena for the configured mode (serving/paged_cache.py).

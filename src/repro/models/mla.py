@@ -170,6 +170,49 @@ def init_paged_mla_cache(cfg: ModelConfig, rt: AttentionRuntime, serving):
                             cfg.param_dtype)
 
 
+def mla_prefill_chunk(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
+                      first: bool, p, x: jax.Array, positions: jax.Array,
+                      slot, block_row, offset, valid, cache):
+    """Chunked paged prefill over the latent arena: the chunk's c_kv (+shared
+    roped key) goes straight into slot ``slot``'s X pages and its queries run
+    the ABSORBED decomposition over the slot's pages — algebraically the
+    one-shot prefill's dense math re-associated, so chunked admission is
+    token-exact vs one-shot at f32. The CPQ latent tier compresses each chunk
+    incrementally (level-0 fit on the first chunk, HQE extension after)."""
+    from repro.serving import paged_cache as pgc
+
+    q_nope, q_rope, c, k_rope = _q_ckv(cfg, p, x, positions)
+    if isinstance(cache, pgc.PagedCPQXCache):
+        cache = pgc.PagedCPQXCache(
+            x=pgc.chunk_cpq_tensor(cache.x, slot, block_row, offset, valid,
+                                   c[:, :, None, :], rt.cpq, first),
+            k_rope=pgc.write_chunk_pages(cache.k_rope, block_row, offset,
+                                         valid, k_rope[0]))
+        o = pgc.decomposed_cpq_chunk_prefill(
+            q_nope, q_rope, cache.x, cache.k_rope, block_row, slot, c,
+            k_rope, offset, valid, p["wuk"], p["wuv"], _scale(cfg))
+        return _out(cfg, p, o), cache
+
+    cache = pgc.PagedXCache(
+        x=pgc.write_chunk_pages(cache.x, block_row, offset, valid, c[0]),
+        k_rope=pgc.write_chunk_pages(cache.k_rope, block_row, offset, valid,
+                                     k_rope[0]))
+    if rt.paged_kernels:
+        from repro.kernels.decomposed_attn.ops import paged_decomposed_prefill_tpu
+
+        o = paged_decomposed_prefill_tpu(
+            q_nope, q_rope, cache.x, cache.k_rope, block_row, offset, valid,
+            p["wuk"], p["wuv"], _scale(cfg))
+    else:
+        o = decomposed_attention(
+            q_nope, q_rope, pgc.gather_pages(cache.x, block_row[None]),
+            pgc.gather_pages(cache.k_rope, block_row[None]),
+            w_k_nope=p["wuk"], w_v=p["wuv"], length=offset + valid,
+            scale=_scale(cfg),
+            query_positions=offset + jnp.arange(x.shape[1], dtype=jnp.int32))
+    return _out(cfg, p, o), cache
+
+
 def _q_ckv_rows(cfg: ModelConfig, p, x_t: jax.Array, positions: jax.Array):
     """Per-row-position variant of _q_ckv for one-token continuous decode."""
     B, T, _ = x_t.shape

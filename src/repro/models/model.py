@@ -264,6 +264,52 @@ def decode_step_rows(cfg: ModelConfig, rt: AttentionRuntime, params,
     return logits, {"prefix": new_prefix, "blocks": new_blocks}
 
 
+def prefill_chunk_rows(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
+                       first: bool, params, tokens: jax.Array,
+                       slot: jax.Array, block_row: jax.Array,
+                       offset: jax.Array, valid: jax.Array, caches):
+    """One CHUNK of a chunked paged admission prefill: ``tokens`` (1, C) is
+    the next slice of the prompt (padded to the static chunk size with the
+    edge token), embedded at absolute positions ``offset + i`` and written
+    straight into slot ``slot``'s arena pages — no contiguous scratch cache
+    is ever allocated, and one compiled shape serves every prompt length
+    (the per-(mode, padded-length) prefill variant zoo collapses to this
+    function's (mode, first-chunk) pair). Returns (logits (1, V) of the
+    chunk's LAST VALID position — meaningful on the final chunk only — and
+    the updated paged caches)."""
+    C = tokens.shape[1]
+    positions = offset + jnp.arange(C, dtype=jnp.int32)
+    x = embed_inputs(cfg, params["embed"], {"tokens": tokens}, positions)
+
+    new_prefix = []
+    for kind, p, c in zip(cfg.prefix_pattern, params["prefix"], caches["prefix"]):
+        x, c2 = tfm.layer_prefill_chunk(cfg, rt, tier, first, kind, p, x,
+                                        positions, slot, block_row, offset,
+                                        valid, c)
+        new_prefix.append(c2)
+
+    new_blocks = caches["blocks"]
+    if cfg.num_blocks:
+        def body(x, inp):
+            block_params, block_caches = _barrier(inp)
+            outs = []
+            for kind, p, c in zip(cfg.block_pattern, block_params, block_caches):
+                x, c2 = tfm.layer_prefill_chunk(cfg, rt, tier, first, kind, p,
+                                                x, positions, slot, block_row,
+                                                offset, valid, c)
+                outs.append(c2)
+            return x, tuple(outs)
+
+        x, new_blocks = jax.lax.scan(
+            body, x, (tuple(params["blocks"]), tuple(caches["blocks"])))
+        new_blocks = list(new_blocks)
+
+    x = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}
+
+
 def pack_prefill_caches(cfg: ModelConfig, rt: AttentionRuntime, paged, src,
                         block_row: jax.Array, slot: jax.Array):
     """Scatter a freshly prefilled B=1 contiguous cache pytree (``src``, from

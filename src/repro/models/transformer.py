@@ -152,6 +152,33 @@ def layer_decode_rows(cfg: ModelConfig, rt: AttentionRuntime, kind: tuple[str, s
     return x_t, cache
 
 
+def layer_prefill_chunk(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
+                        first: bool, kind: tuple[str, str], p, x: jax.Array,
+                        positions: jax.Array, slot, block_row, offset, valid,
+                        cache):
+    """Chunked paged prefill of one prompt chunk for one request slot: the
+    chunk's cache payload is written straight into the slot's arena pages
+    (serving/paged_cache.chunk_attend_paged). Recurrent and cross-attention
+    mixers never reach here — the engine keeps their exact one-shot
+    admission (state integration cannot be cut at page boundaries)."""
+    mixer, mlp = kind
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        y, cache = attn.attn_prefill_chunk(cfg, rt, tier, first, p["mixer"], h,
+                                           positions, slot, block_row, offset,
+                                           valid, cache)
+    elif mixer == "mla":
+        y, cache = mla_lib.mla_prefill_chunk(cfg, rt, tier, first, p["mixer"],
+                                             h, positions, slot, block_row,
+                                             offset, valid, cache)
+    else:
+        raise ValueError(f"chunked prefill has no {mixer!r} path "
+                         "(engine falls back to one-shot admission)")
+    x = x + y
+    x, _ = _apply_mlp_part(cfg, mlp, p, x)
+    return x, cache
+
+
 def layer_prefill(cfg: ModelConfig, rt: AttentionRuntime, kind: tuple[str, str], p,
                   x: jax.Array, positions: jax.Array, patches: Optional[jax.Array],
                   cache):

@@ -165,7 +165,16 @@ class ContinuousServeEngine:
         self._decode = jax.jit(partial(M.decode_step_rows, cfg, rt))
         self._pack = jax.jit(partial(M.pack_prefill_caches, cfg, rt))
         self._escalate = jax.jit(partial(M.escalate_slot, cfg, rt))
-        self._prefills: dict[str, object] = {}
+        self._prefills: dict[str, object] = {}   # one-shot oracle path only
+        self._chunk_fns: dict[tuple[int, bool], object] = {}
+        # two layer families keep the exact one-shot admission: recurrent
+        # mixers integrate every token into O(1) state that cannot be cut at
+        # page boundaries, and capacity-factor MoE routing makes prefill a
+        # function of the token GROUP (chunking the group changes the drop
+        # pattern). Everything else streams chunks into the arena.
+        self._group_routed = any(mlp == "moe" for _, mlp in cfg.layer_kinds)
+        self.chunked = (bool(serving.prefill_chunk) and not self._exact_prefill
+                        and not self._group_routed)
         # cache-bearing layer count for the traffic model
         self._n_cache_layers = sum(1 for m, _ in cfg.layer_kinds if m in ("attn", "mla"))
 
@@ -174,12 +183,24 @@ class ContinuousServeEngine:
     def _rt_for_tier(self, tier: int) -> AttentionRuntime:
         if tier == 0:
             return self.rt
-        return AttentionRuntime(mode="cpq", cpq=self.rt.cpq)
+        return AttentionRuntime(mode="cpq", cpq=self.rt.cpq,
+                                paged_kernels=self.rt.paged_kernels)
 
     def _prefill_for(self, rt: AttentionRuntime):
         if rt.mode not in self._prefills:
             self._prefills[rt.mode] = jax.jit(partial(M.prefill, self.cfg, rt))
         return self._prefills[rt.mode]
+
+    def _chunk_fn(self, tier: int, first: bool):
+        """Jitted chunk-prefill step: ONE compiled shape per (tier mode,
+        first-chunk) pair — every prompt length reuses it (the old
+        per-(mode x padded-length) prefill variant zoo is gone)."""
+        key = (tier, first)
+        if key not in self._chunk_fns:
+            rt_t = self._rt_for_tier(tier)
+            self._chunk_fns[key] = jax.jit(
+                partial(M.prefill_chunk_rows, self.cfg, rt_t, tier, first))
+        return self._chunk_fns[key]
 
     def _bucketed(self, ctx: np.ndarray) -> tuple[np.ndarray, int]:
         """Right-pad to the prefill bucket with the edge token (padding never
@@ -193,8 +214,11 @@ class ContinuousServeEngine:
         return np.concatenate([ctx, np.full((S_pad - S,), ctx[-1], np.int32)]), S
 
     def _admit(self, req: Request, sched: Scheduler, caches, key, gen):
-        """B=1 prefill of the request's context, packed into its slot's pages;
-        samples the request's first token. Returns (caches, first_token)."""
+        """ONE-SHOT admission (the construction-exact oracle path, selected
+        by ``prefill_chunk == 0`` and kept for recurrent stacks): B=1 prefill
+        of the whole context into a contiguous scratch cache, scatter-packed
+        into the slot's pages. Samples the request's first token. Returns
+        (caches, first_token, padded_len)."""
         padded, S = self._bucketed(req.context)
         rt_t = self._rt_for_tier(req.tier)
         ctg = M.init_caches(self.cfg, rt_t, 1, len(padded))
@@ -204,14 +228,41 @@ class ContinuousServeEngine:
         tables = sched.alt_block_tables if req.tier == 1 else sched.block_tables
         caches = self._pack(caches, ctg, jnp.asarray(tables[req.slot]),
                             jnp.asarray(req.slot, jnp.int32))
+        sched.finish_prefill(req)
         tok = int(np.asarray(sample_tokens(logits, key, gen))[0])
-        return caches, tok
+        return caches, tok, len(padded)
 
-    def _row_state(self, sched: Scheduler) -> pgc.RowState:
+    def _prefill_chunk(self, req: Request, sched: Scheduler, caches, key, gen):
+        """Stream the next ``prefill_chunk`` prompt tokens STRAIGHT into the
+        request's arena pages (no scratch cache, no pack copy); on the final
+        chunk, samples the first token from the last valid position's logits.
+        Returns (caches, first_token | None, valid_tokens_this_chunk)."""
+        C = self.serving.prefill_chunk
+        ctx = req.context
+        off = req.length
+        valid = min(C, req.prefill_target - off)
+        chunk = ctx[off:off + valid]
+        if valid < C:  # jit padding with the edge token (masked everywhere)
+            chunk = np.concatenate(
+                [chunk, np.full((C - valid,), chunk[-1], np.int32)])
+        tables = sched.alt_block_tables if req.tier == 1 else sched.block_tables
+        logits, caches = self._chunk_fn(req.tier, off == 0)(
+            self.params, jnp.asarray(chunk[None]),
+            jnp.asarray(req.slot, jnp.int32),
+            jnp.asarray(tables[req.slot]),
+            jnp.asarray(off, jnp.int32), jnp.asarray(valid, jnp.int32), caches)
+        sched.note_chunk(req, valid)
+        if req.length < req.prefill_target:
+            return caches, None, valid
+        sched.finish_prefill(req)
+        tok = int(np.asarray(sample_tokens(logits, key, gen))[0])
+        return caches, tok, valid
+
+    def _row_state(self, sched: Scheduler, active=None) -> pgc.RowState:
         return pgc.RowState(
             lengths=jnp.asarray(sched.lengths),
             block_table=jnp.asarray(sched.block_tables),
-            active=jnp.asarray(sched.active_mask()),
+            active=jnp.asarray(sched.active_mask() if active is None else active),
             tier=jnp.asarray(sched.tiers),
             alt_block_table=(jnp.asarray(sched.alt_block_tables)
                              if sched.tiered else None))
@@ -240,21 +291,30 @@ class ContinuousServeEngine:
         """Drain ``requests`` (admission-queue order = list order; arrivals in
         decode-step units must be non-decreasing). Returns (results, stats):
         results[rid] = {tokens, finish_reason, admitted_step, done_step, ...}.
-        """
+
+        Clock model: ``step`` counts model-invocation ticks. A tick that runs
+        the jitted decode step costs 1, and one prompt chunk rides along for
+        free (the chunked-prefill interleave). The one-shot oracle path
+        charges a monolithic admission its chunk-equivalents up front —
+        ``ceil(padded_len / quantum)`` ticks during which no row decodes —
+        which is exactly the head-of-line stall chunked admission removes
+        (quantum = ``prefill_chunk`` or, on the one-shot path,
+        ``prefill_bucket``)."""
         sched = Scheduler(self.serving, self.tiered)
         for r in sorted(requests, key=lambda r: r.arrival):
             sched.submit(r)
         caches = M.init_paged_caches(self.cfg, self.rt, self.serving, self.tiered)
         bpt0, bpt1 = self._tier_bpt(caches)
+        quantum = self.serving.prefill_chunk or self.serving.prefill_bucket
 
         B = self.serving.num_slots
         last_tok = np.zeros((B,), np.int32)
         key = jax.random.PRNGKey(gen.seed)
         results: dict[int, dict] = {}
-        step = 0                     # decode-step clock
-        decode_steps = live_steps = 0
+        step = 0                     # model-invocation tick clock
+        decode_steps = live_steps = prefill_chunks = 0
         prefill_tokens = generated = 0
-        traffic = 0.0
+        traffic = prefill_write_bytes = 0.0
         util_peak, util_sum, util_n = 0.0, 0.0, 0
         t0 = time.time()
 
@@ -265,6 +325,7 @@ class ContinuousServeEngine:
                 "arrival": req.arrival,
                 "admitted_step": req.admitted_step,
                 "first_token_step": req.first_token_step,
+                "token_steps": np.asarray(req.token_steps, np.int64),
                 "done_step": req.done_step,
                 "preemptions": req.preemptions,
                 "escalated": req.escalated,
@@ -274,21 +335,44 @@ class ContinuousServeEngine:
             sched.retire(req, step, reason)
             results[req.rid] = result_of(req)
 
+        def emit_token(req: Request, tok: int, tick: int, grow: bool = False):
+            """Commit one emitted token. ``tick`` is the clock value at which
+            the token became available (end-of-work convention: a token
+            produced during tick T is stamped T+1; a one-shot admission's
+            first token is stamped at the end of its charged stall).
+            ``grow`` extends the cache bookkeeping (decode tokens only —
+            the first token's position is written by its decode step)."""
+            nonlocal generated
+            req.generated.append(tok)
+            req.token_steps.append(tick)
+            if grow:
+                req.length += 1
+                sched.lengths[req.slot] += 1
+            last_tok[req.slot] = tok
+            generated += 1
+            if req.first_token_step < 0:
+                req.first_token_step = tick
+            if gen.eos_id >= 0 and tok == gen.eos_id:
+                finish(req, "eos")
+            elif req.num_generated >= req.max_new_tokens:
+                finish(req, "max_tokens")
+
         while sched.has_work():
-            # 1) admissions into vacated slots
+            # 1) admissions into vacated slots. Chunked (default): the slot
+            #    enters the prefilling state and its prompt streams below.
+            #    One-shot oracle: prefill the whole context now and charge
+            #    the clock its chunk-equivalents (the head-of-line stall).
             while (req := sched.admit_next(now=step, step=step)) is not None:
+                if self.chunked:
+                    continue  # pump below interleaves one chunk per tick
                 key, sub = jax.random.split(key)
-                caches, tok = self._admit(req, sched, caches, sub, gen)
+                caches, tok, padded = self._admit(req, sched, caches, sub, gen)
+                step += -(-padded // quantum)   # monolithic prefill stall
                 prefill_tokens += req.length
-                req.generated.append(tok)
-                generated += 1
-                last_tok[req.slot] = tok
-                if req.first_token_step < 0:
-                    req.first_token_step = step
-                if gen.eos_id >= 0 and tok == gen.eos_id:
-                    finish(req, "eos")
-                elif req.num_generated >= req.max_new_tokens:
-                    finish(req, "max_tokens")
+                prefill_write_bytes += (req.length
+                                        * (bpt1 if req.tier else bpt0)
+                                        * self._n_cache_layers)
+                emit_token(req, tok, step)      # available after the stall
 
             # 2) watermark policy: escalate running dense requests under
             #    critical memory pressure (dense -> T2, pages freed)
@@ -300,7 +384,31 @@ class ContinuousServeEngine:
                                         jnp.asarray(slot, jnp.int32),
                                         jnp.asarray(length, jnp.int32))
 
-            # 3) growth: map a page for every running row's next write.
+            # 3) chunked-prefill pump: at most ONE prompt chunk per tick
+            #    (the per-step prefill token budget), written straight into
+            #    the slot's arena pages and interleaved with the decode step
+            #    below — long prompts no longer freeze running rows
+            did_chunk = False
+            fresh_slot = -1  # row whose prefill finished THIS tick
+            if self.chunked and (pre := sched.prefilling()):
+                req = pre[0]
+                key, sub = jax.random.split(key)
+                caches, tok, valid = self._prefill_chunk(req, sched, caches,
+                                                         sub, gen)
+                did_chunk = True
+                prefill_chunks += 1
+                prefill_tokens += valid
+                prefill_write_bytes += (valid * (bpt1 if req.tier else bpt0)
+                                        * self._n_cache_layers)
+                if tok is not None:
+                    # the final chunk runs during THIS tick: its first token
+                    # is available at the tick's end (step + 1), and the row
+                    # joins the decode batch from the NEXT tick
+                    emit_token(req, tok, step + 1)
+                    if req.state == "running":
+                        fresh_slot = req.slot
+
+            # 4) growth: map a page for every running row's next write.
             #    Out of pages: a dense grower first escalates itself to the
             #    CPQ arena (frees its dense pages), else the youngest
             #    same-arena request is preempted (recompute)
@@ -329,21 +437,29 @@ class ContinuousServeEngine:
                     sched.preempt(victim)
 
             active = sched.active_mask()
+            if fresh_slot >= 0:
+                active[fresh_slot] = False
             if not active.any():
-                if sched.queue and sched.queue[0].arrival <= step:
-                    # empty machine and still unadmissible => can never fit
-                    req = sched.queue.popleft()
-                    req.state, req.done_step = "done", step
-                    req.finish_reason = "unschedulable"
-                    results[req.rid] = result_of(req)
+                if did_chunk:
+                    step += 1       # prefill-only tick still costs a tick
                     continue
-                # idle: jump the clock to the next arrival
-                if sched.queue:
-                    step = max(step + 1, int(np.ceil(sched.queue[0].arrival)))
+                if not sched.occupied():
+                    if sched.queue and sched.queue[0].arrival <= step:
+                        # empty machine and still unadmissible => never fits
+                        req = sched.queue.popleft()
+                        req.state, req.done_step = "done", step
+                        req.finish_reason = "unschedulable"
+                        results[req.rid] = result_of(req)
+                        continue
+                    # idle: jump the clock to the next arrival
+                    if sched.queue:
+                        step = max(step + 1, int(np.ceil(sched.queue[0].arrival)))
                 continue
 
-            # 4) one jitted decode step over per-row positions
-            rows = self._row_state(sched)
+            # 5) one jitted decode step over per-row positions (rows still
+            #    prefilling — and a row whose final chunk landed this very
+            #    tick — are inactive: their writes hit the null page)
+            rows = self._row_state(sched, active)
             logits, caches = self._decode(self.params, jnp.asarray(last_tok[:, None]),
                                           rows, caches)
             key, sub = jax.random.split(key)
@@ -363,23 +479,15 @@ class ContinuousServeEngine:
             for slot in range(B):
                 if not active[slot]:
                     continue
-                req = sched.slots[slot]
-                t = int(toks[slot])
-                req.generated.append(t)
-                req.length += 1
-                sched.lengths[slot] += 1
-                last_tok[slot] = t
-                generated += 1
-                if gen.eos_id >= 0 and t == gen.eos_id:
-                    finish(req, "eos")
-                elif req.num_generated >= req.max_new_tokens:
-                    finish(req, "max_tokens")
+                emit_token(sched.slots[slot], int(toks[slot]), step, grow=True)
 
         wall = time.time() - t0
         stats = {
             "cache_mode": self.rt.mode,
             "tiered": self.tiered,
+            "chunked_prefill": self.chunked,
             "decode_steps": decode_steps,
+            "prefill_chunks": prefill_chunks,
             "prefill_tokens": prefill_tokens,
             "generated_tokens": generated,
             "tokens_per_step": generated / max(decode_steps, 1),
@@ -387,6 +495,7 @@ class ContinuousServeEngine:
             "arena_utilization_mean": util_sum / max(util_n, 1),
             "arena_utilization_peak": util_peak,
             "decode_traffic_bytes": traffic,
+            "prefill_write_bytes": prefill_write_bytes,
             "bytes_per_token_layer": bpt0,
             "wall_time_s": wall,
             "tokens_per_s": generated / max(wall, 1e-9),

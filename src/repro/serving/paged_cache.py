@@ -93,6 +93,26 @@ def write_prompt_pages(pages: jax.Array, block_row: jax.Array, val: jax.Array) -
     return pages.at[pidx, pos % page_size].set(val.astype(pages.dtype))
 
 
+def write_chunk_pages(pages: jax.Array, block_row: jax.Array, offset: jax.Array,
+                      valid: jax.Array, vals: jax.Array) -> jax.Array:
+    """Bulk-write one prompt CHUNK into one slot's pages at positions
+    ``offset .. offset+C-1`` (chunked paged prefill: the chunk's payload goes
+    straight into the arena — no contiguous scratch cache). vals: (C, ...).
+    Positions past ``offset + valid`` (the chunk's jit padding), positions
+    whose block is unmapped, and positions beyond the slot's page capacity
+    all land on the null page, so page contents are independent of how a
+    prompt is split into chunks (property-tested)."""
+    C, page_size = vals.shape[0], pages.shape[1]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    pos = offset + idx
+    blk = pos // page_size
+    ok = (idx < valid) & (blk < block_row.shape[0])
+    pidx = jnp.where(ok,
+                     block_row[jnp.clip(blk, 0, block_row.shape[0] - 1)],
+                     NULL_PAGE)
+    return pages.at[pidx, pos % page_size].set(vals.astype(pages.dtype))
+
+
 def _sel_rows(active: jax.Array, new, old):
     """Per-slot side-state commit: keep ``new`` on active rows only."""
     return jax.tree.map(
@@ -406,6 +426,277 @@ def pack_into(rt_mode: str, cache, src, block_row: jax.Array, slot: jax.Array):
         return pack_retrieval(cache, src, block_row, slot)
     if isinstance(cache, PagedCPQXCache):
         return pack_cpq_x(cache, src, block_row, slot)
+    raise TypeError(type(cache))
+
+
+# ---------------------------------------------------------- chunked prefill
+
+
+def _slot_cpq(t: PagedCPQTensor, block_row: jax.Array, slot: jax.Array
+              ) -> cpq_lib.CPQTensor:
+    """One slot's logical CPQTensor view (B=1): codes/levels gathered through
+    the slot's block row, HQE side state sliced at ``slot``."""
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)  # noqa: E731
+    return cpq_lib.CPQTensor(
+        codes=gather_pages(t.codes, block_row[None]),
+        scale=sl(t.scale), zero=sl(t.zero),
+        level=gather_pages(t.level, block_row[None]),
+        num_levels=sl(t.num_levels), prune_thr=sl(t.prune_thr))
+
+
+def chunk_cpq_tensor(t: PagedCPQTensor, slot: jax.Array, block_row: jax.Array,
+                     offset: jax.Array, valid: jax.Array, x_c: jax.Array,
+                     cfg: CPQCfg, first: bool) -> PagedCPQTensor:
+    """Incrementally CPQ-compress one prompt chunk into a slot's code pages
+    (chunked paged prefill): the FIRST chunk fits the per-channel prune
+    threshold and level-0 scale/zero (the role the whole prompt plays in
+    ``cpq_compress_prefill``); continuation chunks HQE-extend token by token
+    exactly like decode appends — no re-compression of earlier tokens, ever.
+    x_c: (1, C, H, D); ``first`` is static (one compiled variant each)."""
+    sl = lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)  # noqa: E731
+    if first:
+        codes, level, scale, zero, num_levels, thr = cpq_lib.cpq_fit_chunk(
+            x_c, valid, cfg)
+        prune_thr = t.prune_thr.at[slot].set(thr[0])
+    else:
+        codes, level, scale, zero, num_levels = cpq_lib.cpq_encode_chunk(
+            sl(t.scale), sl(t.zero), sl(t.num_levels), sl(t.prune_thr),
+            x_c, valid, cfg)
+        prune_thr = t.prune_thr
+    return PagedCPQTensor(
+        codes=write_chunk_pages(t.codes, block_row, offset, valid, codes[0]),
+        level=write_chunk_pages(t.level, block_row, offset, valid, level[0]),
+        scale=t.scale.at[slot].set(scale[0]),
+        zero=t.zero.at[slot].set(zero[0]),
+        num_levels=t.num_levels.at[slot].set(num_levels[0]),
+        prune_thr=prune_thr)
+
+
+def _chunk_mask_bias(n_prev: int, chunk: int, offset: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """(C, n_prev + C) additive mask for chunk attention over [earlier-pages
+    view | raw chunk]: earlier key j is live iff j < offset (cross-chunk keys
+    read what decode reads); chunk key i is live iff i < valid and i <= the
+    query's chunk index (causal)."""
+    kp = jnp.concatenate([jnp.arange(n_prev, dtype=jnp.int32),
+                          offset + jnp.arange(chunk, dtype=jnp.int32)])
+    live = jnp.concatenate([jnp.arange(n_prev, dtype=jnp.int32) < offset,
+                            jnp.arange(chunk, dtype=jnp.int32) < valid])
+    qp = offset + jnp.arange(chunk, dtype=jnp.int32)
+    ok = live[None, :] & (kp[None, :] <= qp[:, None])
+    return jnp.where(ok, 0.0, -1e30)
+
+
+def cpq_chunk_prefill_attention(q, kt: PagedCPQTensor, vt: PagedCPQTensor,
+                                block_row, slot, k_raw, v_raw, offset, valid,
+                                scale: float) -> jax.Array:
+    """jnp gather-path oracle of the fused paged T2 prefill kernel: earlier
+    chunks are read back as dequantized codes (what decode reads), the
+    current chunk attends its RAW roped K/V causally — a single-chunk
+    admission therefore reproduces the one-shot prefill's raw-attention
+    numerics. q: (1, C, H, Dh); k_raw/v_raw: (1, C, KV, Dh|Dv)."""
+    from repro.core import attention as core_attn
+
+    k_hat = cpq_lib.cpq_dequant(_slot_cpq(kt, block_row, slot))
+    v_hat = cpq_lib.cpq_dequant(_slot_cpq(vt, block_row, slot))
+    k_all = jnp.concatenate([k_hat.astype(q.dtype), k_raw], axis=1)
+    v_all = jnp.concatenate([v_hat.astype(q.dtype), v_raw], axis=1)
+    bias = _chunk_mask_bias(k_hat.shape[1], q.shape[1], offset, valid)
+    return core_attn.dense_attention(
+        q, k_all, v_all, scale, causal=False, logit_bias=bias[None, :, None, :])
+
+
+def decomposed_cpq_chunk_prefill(q_nope, q_rope, xt: PagedCPQTensor,
+                                 kr_pages, block_row, slot, x_raw, k_rope_raw,
+                                 offset, valid, w_k_nope, w_v,
+                                 scale: float) -> jax.Array:
+    """T1+T2 / MLA-CPQ chunk prefill attention (gather path — this
+    composition has no fused kernel, matching its decode path): earlier X
+    codes are dequantized, the current chunk contributes its raw operand;
+    both cascaded MatMuls of the decomposition run over the combined axis.
+    q_nope: (1, C, H, Dn); x_raw: (1, C, Dm); k_rope_raw: (1, C, KV, R)."""
+    from repro.core.decomposed_attention import (decomposed_query_transform,
+                                                 decomposed_values)
+
+    B, C, H, _ = q_nope.shape
+    x_hat = cpq_lib.cpq_dequant(
+        _slot_cpq(xt, block_row, slot))[:, :, 0, :]             # (1, Nprev, Dm)
+    x_all = jnp.concatenate([x_hat.astype(x_raw.dtype), x_raw], axis=1)
+    r = decomposed_query_transform(q_nope, w_k_nope)            # (1, C, H, Dm)
+    s = jnp.einsum("bchm,bnm->bchn", r, x_all)
+    if q_rope is not None and q_rope.shape[-1] > 0:
+        kr_prev = gather_pages(kr_pages, block_row[None])       # (1, Nprev, KV, R)
+        kr_all = jnp.concatenate([kr_prev.astype(k_rope_raw.dtype),
+                                  k_rope_raw], axis=1)
+        kv_r = kr_all.shape[2]
+        g_r = H // kv_r
+        qg = q_rope.reshape(B, C, kv_r, g_r, q_rope.shape[-1])
+        s = s + jnp.einsum("bckgr,bnkr->bckgn", qg, kr_all).reshape(
+            B, C, H, s.shape[-1])
+    s = s.astype(jnp.float32) * scale
+    s = s + _chunk_mask_bias(x_hat.shape[1], C, offset, valid)[None, :, None, :]
+    w = jax.nn.softmax(s, axis=-1).astype(x_all.dtype)
+    return decomposed_values(w, x_all, w_v)
+
+
+def chunk_attend_paged(
+    rt,
+    cache: PagedCache,
+    *,
+    tier: int,                      # static: tiered-arena arm (0 dense, 1 CPQ)
+    first: bool,                    # static: first chunk of this admission
+    slot: jax.Array,                # () int32 request slot
+    block_row: jax.Array,           # (max_blocks,) slot's block-table row
+    offset: jax.Array,              # () int32 tokens already written
+    valid: jax.Array,               # () int32 real tokens in this chunk
+    q: jax.Array,                   # (1, C, H, Dh) roped chunk queries
+    k_c: jax.Array,                 # (1, C, KV, Dh) roped chunk keys
+    v_c: jax.Array,                 # (1, C, KV, Dh)
+    x_c: Optional[jax.Array],       # (1, C, Dm) block input (T1/MLA operand)
+    k_rope_c: Optional[jax.Array],  # (1, C, KV, R)
+    q_nope: Optional[jax.Array],    # (1, C, H, Dn)
+    q_rope: Optional[jax.Array],    # (1, C, H, R)
+    w_k_nope: Optional[jax.Array],  # (Dm, KV, Dn)
+    w_v: Optional[jax.Array],       # (Dm, KV, Dh)
+    scale: float,
+) -> tuple[jax.Array, PagedCache]:
+    """Chunked paged-prefill analogue of ``decode_attend_paged``: write one
+    prompt chunk's payload STRAIGHT into the slot's arena pages (no
+    contiguous scratch cache, no pack copy), then attend the chunk's C
+    queries over the slot's pages [0, offset + valid) — fused Q-chunk>1
+    paged kernels when ``rt.paged_kernels`` (dense, CPQ, X/MLA tiers), jnp
+    gather otherwise. CPQ tiers compress incrementally (level-0 fit on the
+    first chunk, HQE extension after) and attend earlier chunks through
+    their own codes — cross-chunk prefill reads exactly what decode reads.
+    Returns (out (1, C, H, Dv), new_cache); query rows past ``valid`` are
+    jit-padding garbage the caller never reads."""
+    from repro.configs.base import AttentionRuntime
+    from repro.core import attention as core_attn
+    from repro.core import retrieval_attention as ret_lib
+    from repro.core.decomposed_attention import decomposed_attention
+    from repro.kernels.cpq_dequant_attn.ops import paged_cpq_prefill_tpu
+    from repro.kernels.decomposed_attn.ops import paged_decomposed_prefill_tpu
+    from repro.kernels.flash_attn.ops import paged_flash_prefill_tpu
+
+    fused = rt.paged_kernels
+    total = offset + valid
+    qpos = offset + jnp.arange(q.shape[1], dtype=jnp.int32)
+
+    if isinstance(cache, TieredPagedCache):
+        # the admission tier is host-static for the whole prefill: compile
+        # one chunk function per arm instead of computing both tiers
+        if tier == 0:
+            out, dense = chunk_attend_paged(
+                rt, cache.dense, tier=0, first=first, slot=slot,
+                block_row=block_row, offset=offset, valid=valid, q=q, k_c=k_c,
+                v_c=v_c, x_c=x_c, k_rope_c=k_rope_c, q_nope=q_nope,
+                q_rope=q_rope, w_k_nope=w_k_nope, w_v=w_v, scale=scale)
+            return out, cache._replace(dense=dense)
+        rt_c = AttentionRuntime(mode="cpq", cpq=rt.cpq, paged_kernels=fused)
+        out, cpq = chunk_attend_paged(
+            rt_c, cache.cpq, tier=0, first=first, slot=slot,
+            block_row=block_row, offset=offset, valid=valid, q=q, k_c=k_c,
+            v_c=v_c, x_c=x_c, k_rope_c=k_rope_c, q_nope=q_nope,
+            q_rope=q_rope, w_k_nope=w_k_nope, w_v=w_v, scale=scale)
+        return out, cache._replace(cpq=cpq)
+
+    if isinstance(cache, PagedDenseKVCache):
+        cache = PagedDenseKVCache(
+            k=write_chunk_pages(cache.k, block_row, offset, valid, k_c[0]),
+            v=write_chunk_pages(cache.v, block_row, offset, valid, v_c[0]))
+        if fused:
+            out = paged_flash_prefill_tpu(q, cache.k, cache.v, block_row,
+                                          offset, valid, scale)
+        else:
+            out = core_attn.dense_attention(
+                q, gather_pages(cache.k, block_row[None]),
+                gather_pages(cache.v, block_row[None]),
+                scale, causal=True, q_offset=offset, kv_length=total)
+        return out, cache
+
+    if isinstance(cache, PagedXCache):
+        cache = PagedXCache(
+            x=write_chunk_pages(cache.x, block_row, offset, valid, x_c[0]),
+            k_rope=(write_chunk_pages(cache.k_rope, block_row, offset, valid,
+                                      k_rope_c[0])
+                    if k_rope_c is not None else cache.k_rope))
+        if fused:
+            out = paged_decomposed_prefill_tpu(
+                q_nope, q_rope, cache.x, cache.k_rope, block_row, offset,
+                valid, w_k_nope, w_v, scale)
+        else:
+            out = decomposed_attention(
+                q_nope, q_rope, gather_pages(cache.x, block_row[None]),
+                gather_pages(cache.k_rope, block_row[None]),
+                w_k_nope, w_v, total, scale, query_positions=qpos)
+        return out, cache
+
+    if isinstance(cache, PagedCPQKVCache):
+        cache = PagedCPQKVCache(
+            k=chunk_cpq_tensor(cache.k, slot, block_row, offset, valid,
+                               k_c, rt.cpq, first),
+            v=chunk_cpq_tensor(cache.v, slot, block_row, offset, valid,
+                               v_c, rt.cpq, first))
+        if fused:
+            out = paged_cpq_prefill_tpu(q, cache.k, cache.v, k_c, v_c, slot,
+                                        block_row, offset, valid, scale)
+        else:
+            out = cpq_chunk_prefill_attention(
+                q, cache.k, cache.v, block_row, slot, k_c, v_c, offset,
+                valid, scale)
+        return out, cache
+
+    if isinstance(cache, PagedRetrievalCache):
+        dp = rt.retrieval.proxy_dim or k_c.shape[-1]
+        # proxy fit is min/max per channel: masking the chunk's jit padding
+        # with the last valid key keeps the first-chunk fit exact
+        idx = jnp.arange(k_c.shape[1], dtype=jnp.int32)
+        edge = jax.lax.dynamic_index_in_dim(
+            k_c, jnp.maximum(valid - 1, 0), axis=1)             # (1, 1, KV, Dh)
+        k_fit = jnp.where((idx < valid)[None, :, None, None], k_c, edge)
+        if first:
+            code_c, pscale, pzero = ret_lib.fit_proxy(
+                k_fit[..., :dp], rt.retrieval.proxy_bits)
+            proxy_scale = cache.proxy_scale.at[slot].set(pscale[0])
+            proxy_zero = cache.proxy_zero.at[slot].set(pzero[0])
+        else:
+            sl = lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=0)  # noqa: E731
+            code_c = ret_lib.encode_proxy(
+                k_c[..., :dp], sl(cache.proxy_scale), sl(cache.proxy_zero),
+                rt.retrieval.proxy_bits)
+            proxy_scale, proxy_zero = cache.proxy_scale, cache.proxy_zero
+        cache = PagedRetrievalCache(
+            k=write_chunk_pages(cache.k, block_row, offset, valid, k_c[0]),
+            v=write_chunk_pages(cache.v, block_row, offset, valid, v_c[0]),
+            proxy=write_chunk_pages(cache.proxy, block_row, offset, valid,
+                                    code_c[0]),
+            proxy_scale=proxy_scale, proxy_zero=proxy_zero)
+        # prefill COMPUTE is dense (T3 gates decode reads only): K/V pages
+        # hold raw payload, so the dense chunk kernels serve this tier too
+        if fused:
+            out = paged_flash_prefill_tpu(q, cache.k, cache.v, block_row,
+                                          offset, valid, scale)
+        else:
+            out = core_attn.dense_attention(
+                q, gather_pages(cache.k, block_row[None]),
+                gather_pages(cache.v, block_row[None]),
+                scale, causal=True, q_offset=offset, kv_length=total)
+        return out, cache
+
+    if isinstance(cache, PagedCPQXCache):
+        cache = PagedCPQXCache(
+            x=chunk_cpq_tensor(cache.x, slot, block_row, offset, valid,
+                               x_c[:, :, None, :], rt.cpq, first),
+            k_rope=(write_chunk_pages(cache.k_rope, block_row, offset, valid,
+                                      k_rope_c[0])
+                    if k_rope_c is not None else cache.k_rope))
+        out = decomposed_cpq_chunk_prefill(
+            q_nope, q_rope, cache.x, cache.k_rope, block_row, slot, x_c,
+            k_rope_c if k_rope_c is not None
+            else jnp.zeros((1, q.shape[1], 1, 0), x_c.dtype),
+            offset, valid, w_k_nope, w_v, scale)
+        return out, cache
+
     raise TypeError(type(cache))
 
 

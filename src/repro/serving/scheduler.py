@@ -6,9 +6,16 @@ it every step and turns its decisions into jitted cache operations.
 
 Request lifecycle:
 
-    queued --admit--> running --retire--> done
-                \\        | preempt (out of pages: recompute-style, vLLM)
-                 <--------+
+    queued --admit--> prefilling --finish_prefill--> running --retire--> done
+                \\          |                           | preempt (out of
+                 \\         | preempt                   | pages: recompute-
+                  <---------+---------------------------+ style, vLLM)
+
+``prefilling`` is the chunked-admission window: the slot and its pages are
+owned, but the prompt is still streaming into the arena chunk by chunk
+(at most one chunk per engine tick, interleaved with the decode step) and
+the row does not decode yet. The one-shot path (prefill_chunk == 0)
+passes through it within a single engine tick.
 
 Watermark policy (free-page fraction of the DENSE base arena):
 
@@ -51,12 +58,14 @@ class Request:
     max_new_tokens: int
     arrival: float = 0.0                    # decode-step time units
     # -- scheduler-owned state --
-    state: str = "queued"                   # queued | running | done
+    state: str = "queued"                   # queued | prefilling | running | done
     slot: int = -1
     tier: int = 0                           # 0 = base, 1 = escalated/compressed
     pages: list = field(default_factory=list)
     generated: list = field(default_factory=list)
     length: int = 0                         # valid cache tokens
+    prefill_target: int = 0                 # context tokens this admission owes
+    token_steps: list = field(default_factory=list)  # emission tick per token
     admitted_step: int = -1
     first_token_step: int = -1
     done_step: int = -1
@@ -98,11 +107,23 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(r is not None for r in self.slots)
 
-    def running(self) -> list[Request]:
+    def occupied(self) -> list[Request]:
+        """Every slot holder — decoding AND mid-prefill (all own pages)."""
         return [r for r in self.slots if r is not None]
 
+    def running(self) -> list[Request]:
+        """Rows that decode this step (prefill finished)."""
+        return [r for r in self.slots if r is not None and r.state == "running"]
+
+    def prefilling(self) -> list[Request]:
+        """Chunked admissions still streaming their prompt, oldest first."""
+        rows = [r for r in self.slots
+                if r is not None and r.state == "prefilling"]
+        return sorted(rows, key=lambda r: r.admitted_step)
+
     def active_mask(self) -> np.ndarray:
-        return np.array([r is not None for r in self.slots], bool)
+        return np.array([r is not None and r.state == "running"
+                         for r in self.slots], bool)
 
     def free_frac(self) -> float:
         return self.dense_alloc.num_free / max(self.dense_alloc.num_pages - 1, 1)
@@ -148,8 +169,9 @@ class Scheduler:
                 return None
         self.queue.popleft()
         req.pages = arena.alloc(need)
-        req.state, req.slot, req.tier = "running", slot, tier
-        req.length = len(req.context)
+        req.state, req.slot, req.tier = "prefilling", slot, tier
+        req.prefill_target = len(req.context)
+        req.length = 0  # grows as chunks land (finish_prefill closes it out)
         if req.admitted_step < 0:
             req.admitted_step = step
         self.slots[slot] = req
@@ -158,12 +180,25 @@ class Scheduler:
         tables[slot, :need] = req.pages
         if self.tiered:
             self._tables(1 - tier)[slot, :] = NULL_PAGE
-        self.lengths[slot] = req.length
+        self.lengths[slot] = 0
         self.tiers[slot] = tier
         self.stats["admitted"] += 1
         self.stats["peak_dense_pages"] = max(self.stats["peak_dense_pages"],
                                              self.dense_alloc.num_used)
         return req
+
+    def note_chunk(self, req: Request, n_tokens: int) -> None:
+        """A prompt chunk of ``n_tokens`` valid tokens landed in the arena."""
+        assert req.state == "prefilling"
+        req.length = min(req.length + n_tokens, req.prefill_target)
+        self.lengths[req.slot] = req.length
+
+    def finish_prefill(self, req: Request) -> None:
+        """The full context is in the arena: the row starts decoding."""
+        assert req.state == "prefilling"
+        req.state = "running"
+        req.length = req.prefill_target
+        self.lengths[req.slot] = req.length
 
     # -------------------------------------------------------------- growth
 
@@ -216,10 +251,11 @@ class Scheduler:
         self.queue.appendleft(req)
 
     def preemption_victim(self, exclude: Request) -> Optional[Request]:
-        """Youngest running request whose pages live in the SAME arena the
-        blocked request allocates from — evicting a tier-1 victim cannot
-        unblock a dense-tier grower (and vice versa)."""
-        cands = [r for r in self.running()
+        """Youngest slot holder (decoding or mid-prefill — both own pages)
+        whose pages live in the SAME arena the blocked request allocates from
+        — evicting a tier-1 victim cannot unblock a dense-tier grower (and
+        vice versa)."""
+        cands = [r for r in self.occupied()
                  if r is not exclude and r.tier == exclude.tier]
         return max(cands, key=lambda r: r.admitted_step, default=None)
 

@@ -49,7 +49,14 @@ def test_scheduler_admission_and_leak_free():
     b = sched.admit_next(now=0, step=0)
     assert a is reqs[0] and b is reqs[1]
     assert sched.admit_next(now=0, step=0) is None  # no free slot
-    assert sched.lengths[a.slot] == 6 and len(a.pages) == 2
+    # admission enters the prefilling window: pages owned, nothing valid yet
+    assert a.state == "prefilling" and a.prefill_target == 6
+    assert sched.lengths[a.slot] == 0 and len(a.pages) == 2
+    sched.note_chunk(a, 4)
+    assert sched.lengths[a.slot] == 4 and a.state == "prefilling"
+    sched.finish_prefill(a)
+    sched.finish_prefill(b)
+    assert a.state == "running" and sched.lengths[a.slot] == 6
     # block table maps exactly the prompt's pages; rest is null
     assert (sched.block_tables[a.slot, :2] > 0).all()
     assert (sched.block_tables[a.slot, 2:] == 0).all()
@@ -80,6 +87,7 @@ def test_scheduler_growth_and_ceiling():
     r = Request(rid=0, prompt=np.arange(3, dtype=np.int32), max_new_tokens=3)
     sched.submit(r)
     sched.admit_next(now=0, step=0)
+    sched.finish_prefill(r)
     assert len(r.pages) == 2                      # ceil(3/2)
     assert sched.ensure_writable(r)               # position 3: page already mapped
     r.length = 4
@@ -215,6 +223,7 @@ def test_admitted_request_resumes_at_correct_position(model):
         refs.append(out[0])
     serving = ServingCfg(num_slots=2, page_size=4, num_pages=33,
                          max_blocks_per_slot=8, prefill_bucket=4,
+                         prefill_chunk=0,  # one-shot oracle: shares static ops
                          use_paged_kernels=False)  # gather path == static ops
     eng = ContinuousServeEngine(cfg, params, serving=serving)
     res, stats = eng.serve(reqs, gen)
@@ -238,6 +247,7 @@ def test_preemption_recompute_is_exact(model):
         refs[r.rid] = static.generate({"tokens": jnp.asarray(r.prompt[None])}, gen)[0][0]
     serving = ServingCfg(num_slots=3, page_size=4, num_pages=10,  # too small
                          max_blocks_per_slot=8, prefill_bucket=4,
+                         prefill_chunk=0,  # one-shot oracle: shares static ops
                          use_paged_kernels=False)  # gather path == static ops
     eng = ContinuousServeEngine(cfg, params, serving=serving)
     res, stats = eng.serve(reqs_small, gen)

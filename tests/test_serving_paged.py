@@ -224,6 +224,7 @@ def test_paged_dense_greedy_equals_contiguous():
     refs = _static_refs(cfg, params, prompts, gen)
     serving = ServingCfg(num_slots=4, page_size=4, num_pages=41,
                          max_blocks_per_slot=8, prefill_bucket=4,
+                         prefill_chunk=0,  # one-shot oracle: shares static ops
                          use_paged_kernels=False)
     eng = ContinuousServeEngine(cfg, params, serving=serving)
     res, stats = eng.serve(
@@ -249,6 +250,7 @@ def test_paged_modes_match_contiguous(arch, mode):
     refs = _static_refs(cfg, params, prompts, gen)
     serving = ServingCfg(num_slots=4, page_size=4, num_pages=65,
                          max_blocks_per_slot=8, prefill_bucket=4,
+                         prefill_chunk=0,  # one-shot oracle: shares static ops
                          use_paged_kernels=False)  # gather path == static ops
     eng = ContinuousServeEngine(cfg, params, serving=serving)
     res, _ = eng.serve(
@@ -269,6 +271,7 @@ def test_paged_cpq_modes_match_with_unbucketed_prefill(mode):
     refs = _static_refs(cfg, params, prompts, gen)
     serving = ServingCfg(num_slots=4, page_size=4, num_pages=65,
                          max_blocks_per_slot=8, prefill_bucket=1,
+                         prefill_chunk=0,  # one-shot oracle: shares static ops
                          use_paged_kernels=False)  # gather path == static ops
     eng = ContinuousServeEngine(cfg, params, serving=serving)
     res, _ = eng.serve(
