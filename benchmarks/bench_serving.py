@@ -26,7 +26,13 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 import time
+
+from repro.launch._bootstrap import ensure_host_devices_for_mesh
+
+# --mesh needs emulated host devices BEFORE the jax backend initializes
+ensure_host_devices_for_mesh(sys.argv)
 
 import numpy as np
 
@@ -147,6 +153,14 @@ def run_continuous(cfg, params, work: list[WorkItem], serving: ServingCfg,
         "preemptions": stats["preemptions"],
         "escalations": stats["escalations"],
         "prefill_chunks": stats["prefill_chunks"],
+        # mesh / allocator surface (public engine stats, no private state)
+        "tokens": np.concatenate([res[w.rid]["tokens"] for w in work]),
+        "model_shards": stats["model_shards"],
+        "arena_bytes_total": stats["arena_bytes_total"],
+        "arena_bytes_per_device": stats["arena_bytes_per_device"],
+        "interconnect_bytes_per_token": stats["interconnect_bytes_per_token"],
+        "dense_arena_utilization": stats["dense_arena_utilization"],
+        "defrags": stats["defrags"],
     }
 
 
@@ -241,11 +255,48 @@ def compare_decode_latency(cfg, params, *, num_slots: int = 4,
     return fused, gather
 
 
-def main(emit, smoke: bool = False):
+def mesh_sweep(cfg, params, emit, *, n_requests: int = 10, rate: float = 1.0):
+    """1/2/4-way model sharding of the paged arenas on emulated host devices
+    (--mesh): per-device arena bytes shrink ~1/mp (each device holds its
+    kv-head slice of every page) while tokens/step stays flat — plus the
+    interconnect cost (per-head partial concat bytes per generated token),
+    mirroring the paper's off-chip-movement accounting. The throughput
+    acceptance bar stays on the unsharded path (CPU emulation serializes
+    shards, so sharded wall clock is not meaningful here)."""
+    from repro.launch.mesh import make_serve_mesh
+
+    # f32: the greedy-parity assert below is token-exact at f32 (the same
+    # contract tests/test_serving_sharded.py pins); bf16 argmax ties can flip
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    params = jax.tree.map(lambda a: a.astype(jnp.float32)
+                          if a.dtype == jnp.bfloat16 else a, params)
+    work = make_workload(0, n_requests, cfg.vocab_size, rate)
+    max_len = max(len(w.prompt) + w.target for w in work)
+    serving = equal_arena_serving(4, max_len, page_size=8)
+    base_tokens = None
+    for mp in (1, 2, 4):
+        mesh = make_serve_mesh(1, mp) if mp > 1 else None
+        r = run_continuous(cfg, params, work, serving,
+                           mode_rt=dataclasses.replace(cfg.attention, mesh=mesh))
+        if base_tokens is None:
+            base_tokens = r["tokens"]
+        else:
+            assert np.array_equal(base_tokens, r["tokens"]), (
+                f"mesh mp={mp} broke greedy parity vs single device")
+        emit(f"serving_mesh_mp{mp}", r["wall_time_s"] * 1e6,
+             f"tok_per_step={r['tokens_per_step']:.2f};"
+             f"arena_MiB_per_device={r['arena_bytes_per_device'] / 2**20:.3f};"
+             f"arena_MiB_total={r['arena_bytes_total'] / 2**20:.3f};"
+             f"icnx_B_per_tok={r['interconnect_bytes_per_token']:.1f}")
+
+
+def main(emit, smoke: bool = False, mesh: bool = False):
     from repro import kernels as K
 
     cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
     params = M.init_params(cfg, jax.random.PRNGKey(0))
+    if mesh:
+        mesh_sweep(cfg, params, emit)
     rates = (1.0,) if smoke else (0.25, 1.0, 4.0)
     n_requests = 12 if smoke else 32
     worst = 0.0
@@ -321,9 +372,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="one small rate; asserts the >=1.5x acceptance bar")
+    ap.add_argument("--mesh", action="store_true",
+                    help="sweep 1/2/4-way model sharding of the paged arenas "
+                         "on emulated host devices (reports per-device arena "
+                         "bytes, tokens/step, interconnect bytes/token)")
     args = ap.parse_args()
 
     def emit(name, us, derived=""):
         print(f"{name},{us:.2f},{derived}")
 
-    main(emit, smoke=args.smoke)
+    main(emit, smoke=args.smoke, mesh=args.mesh)

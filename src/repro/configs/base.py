@@ -88,6 +88,12 @@ class AttentionRuntime:
     # kernels (dense/CPQ/X-MLA tiers) instead of materializing logical views.
     # False falls back to the jnp gather path (oracle / benchmark foil).
     paged_kernels: bool = True
+    # serving device mesh (jax.sharding.Mesh with a "model" axis, or None =
+    # single device). When set, decode_attend_paged / chunk_attend_paged
+    # route the supported tiers through shard_map over the kv-head axis so
+    # each device sweeps only its local head shard of the paged arena
+    # (serving/sharded.py); None keeps today's single-device path untouched.
+    mesh: Optional[object] = None
 
     def __post_init__(self):
         assert self.mode in ("dense", "decomposed", "cpq", "retrieval",
@@ -129,6 +135,12 @@ class ServingCfg:
     # fused paged-attention decode kernels: None defers to the engine's
     # AttentionRuntime.paged_kernels (default on); True/False overrides it
     use_paged_kernels: Optional[bool] = None
+    # base-arena compaction: every N retirements the engine applies the
+    # scheduler's defrag plan (mapped pages relabel onto the lowest physical
+    # ids — locality for the fused kernels' sequential page reads). 0 = off.
+    # Logical contents are invariant (property-tested, incl. sharded arenas);
+    # the count surfaces as the ``defrags`` serve stat.
+    defrag_every: int = 0
 
     def __post_init__(self):
         assert self.num_pages >= 2 and self.escalated_pages >= 2
@@ -136,6 +148,7 @@ class ServingCfg:
         assert 0.0 <= self.critical_watermark <= self.low_watermark <= 1.0
         assert self.prefill_bucket >= 1
         assert self.prefill_chunk >= 0
+        assert self.defrag_every >= 0
         if self.prefill_chunk:
             assert self.prefill_chunk % self.page_size == 0, (
                 "prefill_chunk must be page-aligned "

@@ -51,6 +51,35 @@ def act_rules(multi_pod: bool, seq_axis=None) -> dict:
     }
 
 
+def serve_paged_rules(pool_axis=None) -> dict:
+    """Logical-axis rules for the paged serving arenas (continuous batching).
+
+    The physical page pool of every paged container partitions over the
+    KV-HEAD axis (each device owns its head slice of every page — the
+    paper's bank-parallel attention: compute runs where the KV lives and
+    only per-head partials cross the interconnect). Latent pools (T1 X /
+    MLA c_kv) have no head axis, so their FEATURE axis shards instead —
+    storage is partitioned for HBM capacity and the serving shard_map
+    all-gathers the local feature shards before the absorbed attend
+    (serving/sharded.py). Page-pool and page axes stay unsharded by default;
+    ``pool_axis`` ("data") opts the pool axis into capacity sharding for
+    tiers served with global-semantics compute (GSPMD inserts the gathers).
+    Block tables, RowState, and the slot/level axes replicate — note the
+    slot-INDEXED CPQ HQE side state (scale/zero/num_levels/prune_thr) still
+    shards its kv-head axis, exactly like the code pages it dequantizes.
+    The CPQ-X (T1+T2 / MLA-CPQ) code pools are the exception and replicate
+    entirely — see distributed.cache_specs._paged_cpq_specs."""
+    return {
+        "page_pool": pool_axis,   # physical page axis (P)
+        "page": None,             # within-page token axis
+        "kv_heads": "model",      # per-head pools: dense K/V, CPQ codes, proxy
+        "head_dim": None,
+        "latent": "model",        # feature axis of X / MLA latent pools
+        "slots": None,            # per-slot side state (CPQ HQE, proxy calib)
+        "levels": None,           # HQE level axis
+    }
+
+
 def batch_axes(multi_pod: bool, batch_size: int, mesh_shape: dict) -> tuple:
     """Mesh axes to shard the global batch over (drop axes that don't divide)."""
     axes = (("pod", "data") if multi_pod else ("data",))

@@ -11,5 +11,29 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_serve_mesh(dp: int = 1, mp: int = 1):
+    """Serving mesh ("data", "model"): ``mp``-way model sharding partitions
+    every paged arena's kv-head (or latent feature) axis — per-device HBM
+    holds 1/mp of the cache and each device sweeps only its head shard
+    (serving/sharded.py); ``dp`` replicates the engine (arenas + params) for
+    throughput. Host-platform runs emulate devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    n = len(jax.devices())
+    if dp * mp > n:
+        raise ValueError(f"mesh ({dp},{mp}) needs {dp * mp} devices, have {n} "
+                         "(on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    return jax.make_mesh((dp, mp), ("data", "model"))
+
+
+def parse_mesh_arg(arg: str):
+    """CLI ``--mesh dp,mp`` -> Mesh (e.g. "1,2")."""
+    try:
+        dp, mp = (int(x) for x in arg.split(","))
+    except ValueError as e:
+        raise ValueError(f"--mesh wants 'dp,mp' (e.g. 1,2); got {arg!r}") from e
+    return make_serve_mesh(dp, mp)
+
+
 def mesh_shape_dict(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -9,7 +9,13 @@ T1/T2/T3 traffic story is visible from the CLI.
 from __future__ import annotations
 
 import argparse
+import sys
 import time
+
+from repro.launch._bootstrap import ensure_host_devices_for_mesh
+
+# --mesh needs the emulated host devices BEFORE the jax backend initializes
+ensure_host_devices_for_mesh(sys.argv)
 
 import jax
 import numpy as np
@@ -39,6 +45,11 @@ def main(argv=None):
                     help="chunked paged prefill: prompts stream into arena "
                          "pages in chunks of this many tokens, interleaved "
                          "with decode (page-aligned; 0 = one-shot admission)")
+    ap.add_argument("--mesh", default=None, metavar="dp,mp",
+                    help="serve over a device mesh: dp-way engine replication"
+                         " x mp-way model sharding of the paged arenas "
+                         "(kv-head axis; requires --continuous). On CPU, "
+                         "devices are emulated via XLA_FLAGS.")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -54,6 +65,14 @@ def main(argv=None):
     batch.pop("labels")
     batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
 
+    mesh = None
+    if args.mesh:
+        if not args.continuous:
+            ap.error("--mesh requires --continuous (paged arenas)")
+        from repro.launch.mesh import parse_mesh_arg
+
+        mesh = parse_mesh_arg(args.mesh)
+
     if args.continuous:
         from repro.configs import ServingCfg
         from repro.serving import ContinuousServeEngine
@@ -65,9 +84,13 @@ def main(argv=None):
             num_pages=args.batch * pages_needed(n_max, 16) + 1,
             max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16,
             prefill_chunk=args.prefill_chunk)
-        eng = ContinuousServeEngine(cfg, params, serving=serving)
+        eng = ContinuousServeEngine(cfg, params, serving=serving, mesh=mesh)
         print(f"[serve] chunked prefill: "
               f"{'on, chunk=' + str(args.prefill_chunk) if eng.chunked else 'off (one-shot admission)'}")
+        if mesh is not None:
+            print(f"[serve] mesh: data={mesh.shape['data']} "
+                  f"model={mesh.shape['model']} "
+                  f"(arenas sharded over the kv-head axis)")
     else:
         eng = ServeEngine(cfg, params, max_len=args.prompt + args.new)
     gen = GenerationConfig(max_new_tokens=args.new, temperature=args.temperature,
@@ -93,6 +116,12 @@ def main(argv=None):
     else:  # retrieval: dense cache + proxy codes; V reads drop to top_k
         bpt = 2.0 * cfg.num_kv_heads * cfg.head_dim * 2 + cfg.num_kv_heads * cfg.head_dim
 
+    if args.continuous and mesh is not None:
+        print(f"[serve] arena: {stats['arena_bytes_per_device'] / 2**20:.2f} "
+              f"MiB/device of {stats['arena_bytes_total'] / 2**20:.2f} MiB "
+              f"total; interconnect "
+              f"{stats['interconnect_bytes_per_token']:.1f} B/token "
+              "(per-head partial concat + latent pool gathers)")
     print(f"[serve] arch={cfg.name} mode={mode}")
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
           f"({out.size / max(dt, 1e-9):.1f} tok/s batch-aggregate)")

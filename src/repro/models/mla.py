@@ -193,6 +193,19 @@ def mla_prefill_chunk(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
             k_rope, offset, valid, p["wuk"], p["wuv"], _scale(cfg))
         return _out(cfg, p, o), cache
 
+    if getattr(rt, "mesh", None) is not None:
+        # mesh-native: query heads + W_UK/W_UV shard over "model"; the
+        # latent pages are storage-sharded on their feature axis and
+        # reassembled locally inside the shard_map (serving/sharded.py)
+        from repro.serving.sharded import chunk_attend_sharded
+
+        o, cache = chunk_attend_sharded(
+            rt, cache, tier=tier, first=first, slot=slot, block_row=block_row,
+            offset=offset, valid=valid, q=None, k_c=None, v_c=None, x_c=c,
+            k_rope_c=k_rope, q_nope=q_nope, q_rope=q_rope,
+            w_k_nope=p["wuk"], w_v=p["wuv"], scale=_scale(cfg))
+        return _out(cfg, p, o), cache
+
     cache = pgc.PagedXCache(
         x=pgc.write_chunk_pages(cache.x, block_row, offset, valid, c[0]),
         k_rope=pgc.write_chunk_pages(cache.k_rope, block_row, offset, valid,
@@ -241,6 +254,17 @@ def mla_decode_rows(cfg: ModelConfig, rt: AttentionRuntime, p, x_t: jax.Array,
 
     q_nope, q_rope, c_t, k_rope_t = _q_ckv_rows(cfg, p, x_t, rows.lengths)
     new_len = rows.lengths + rows.active.astype(jnp.int32)
+
+    if getattr(rt, "mesh", None) is not None and isinstance(cache, pgc.PagedXCache):
+        # mesh-native absorbed decode: head-sharded shard_map over the
+        # storage-sharded latent arena (serving/sharded.py)
+        from repro.serving.sharded import decode_attend_sharded
+
+        o, cache = decode_attend_sharded(
+            rt, cache, rows, q=None, k_t=None, v_t=None, x_t=c_t,
+            k_rope_t=k_rope_t, q_nope=q_nope, q_rope=q_rope,
+            w_k_nope=p["wuk"], w_v=p["wuv"], scale=_scale(cfg))
+        return _out(cfg, p, o), cache
 
     if isinstance(cache, pgc.PagedCPQXCache):
         cache = pgc.PagedCPQXCache(

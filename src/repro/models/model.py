@@ -331,6 +331,25 @@ def pack_prefill_caches(cfg: ModelConfig, rt: AttentionRuntime, paged, src,
     return {"prefix": prefix, "blocks": blocks}
 
 
+def defrag_caches(cfg: ModelConfig, rt: AttentionRuntime, caches,
+                  perm: jax.Array):
+    """Apply a scheduler defrag permutation (``Scheduler.plan_defrag``) to
+    every attention layer's BASE-arena page pools: mapped pages move onto
+    the lowest physical ids so each request's pages become physically
+    contiguous again (locality for the fused kernels' sequential reads).
+    Non-attention layer state is slot-indexed, not paged."""
+    def one(kind, c):
+        mixer, _ = kind
+        if mixer not in ("attn", "mla"):
+            return c
+        return pgc.permute_pool(c, perm)
+
+    prefix = [one(k, c) for k, c in zip(cfg.prefix_pattern, caches["prefix"])]
+    blocks = [jax.vmap(lambda c, kind=kind: one(kind, c))(pc)
+              for kind, pc in zip(cfg.block_pattern, caches["blocks"])]
+    return {"prefix": prefix, "blocks": blocks}
+
+
 def escalate_slot(cfg: ModelConfig, rt: AttentionRuntime, caches,
                   dense_row: jax.Array, cpq_row: jax.Array, slot: jax.Array,
                   length: jax.Array):

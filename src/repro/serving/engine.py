@@ -135,11 +135,18 @@ class ContinuousServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, rt: Optional[AttentionRuntime] = None,
-                 serving: ServingCfg = ServingCfg()):
+                 serving: ServingCfg = ServingCfg(), mesh=None):
         self.cfg = cfg
         self.params = params
         self.serving = serving
         rt = rt or cfg.attention
+        if mesh is not None:
+            if getattr(rt, "mesh", None) is not None and rt.mesh != mesh:
+                raise SchedulerConfigError(
+                    "conflicting device meshes: rt.mesh and the mesh= "
+                    "argument disagree — set one or make them equal")
+            rt = dataclasses.replace(rt, mesh=mesh)
+        self.mesh = getattr(rt, "mesh", None)
         if (serving.use_paged_kernels is not None
                 and rt.paged_kernels != serving.use_paged_kernels):
             # explicit serving-config override of the decode-kernel choice
@@ -157,6 +164,27 @@ class ContinuousServeEngine:
                 "continuous serving drives token prompts; "
                 f"input_kind={cfg.input_kind!r} needs the static engine")
         self.rt = rt
+        # mesh-native serving: validate the model axis divides every head /
+        # latent axis it shards, pin the replicated params once, and build
+        # the fitted NamedSharding tree the paged arenas are placed with
+        from repro.serving import sharded as _sharded
+
+        self.model_shards = _sharded.validate_serve_mesh(cfg, rt, self.tiered)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as PS
+
+            from repro.distributed.cache_specs import paged_cache_pspecs
+            from repro.distributed.sharding import fit_spec_to_shape
+
+            self.params = jax.device_put(
+                params, NamedSharding(self.mesh, PS()))
+            shapes = jax.eval_shape(partial(M.init_paged_caches, cfg, rt,
+                                            serving, self.tiered))
+            specs = paged_cache_pspecs(cfg, rt, serving, self.tiered)
+            self._cache_shardings = jax.tree.map(
+                lambda sp, a: NamedSharding(
+                    self.mesh, fit_spec_to_shape(sp, a.shape, self.mesh)),
+                specs, shapes, is_leaf=lambda x: isinstance(x, PS))
         # recurrent mixers integrate every prefill token into their state, so
         # bucket padding would pollute it (attention only masks); those archs
         # prefill at exact lengths (more jit variants, exact math)
@@ -165,6 +193,7 @@ class ContinuousServeEngine:
         self._decode = jax.jit(partial(M.decode_step_rows, cfg, rt))
         self._pack = jax.jit(partial(M.pack_prefill_caches, cfg, rt))
         self._escalate = jax.jit(partial(M.escalate_slot, cfg, rt))
+        self._defrag = jax.jit(partial(M.defrag_caches, cfg, rt))
         self._prefills: dict[str, object] = {}   # one-shot oracle path only
         self._chunk_fns: dict[tuple[int, bool], object] = {}
         # two layer families keep the exact one-shot admission: recurrent
@@ -184,7 +213,8 @@ class ContinuousServeEngine:
         if tier == 0:
             return self.rt
         return AttentionRuntime(mode="cpq", cpq=self.rt.cpq,
-                                paged_kernels=self.rt.paged_kernels)
+                                paged_kernels=self.rt.paged_kernels,
+                                mesh=self.mesh)
 
     def _prefill_for(self, rt: AttentionRuntime):
         if rt.mode not in self._prefills:
@@ -304,8 +334,36 @@ class ContinuousServeEngine:
         for r in sorted(requests, key=lambda r: r.arrival):
             sched.submit(r)
         caches = M.init_paged_caches(self.cfg, self.rt, self.serving, self.tiered)
+        if self.mesh is not None:
+            # place the arenas per the paged cache specs: kv-head / latent
+            # feature axes over "model", pools and slot state replicated
+            caches = jax.device_put(caches, self._cache_shardings)
         bpt0, bpt1 = self._tier_bpt(caches)
         quantum = self.serving.prefill_chunk or self.serving.prefill_bucket
+        # interconnect accounting under model sharding: each device emits its
+        # per-head output partial and receives the others' — the paper's
+        # "only small per-head partials cross the interconnect" measured as
+        # (mp-1)/mp of the concatenated head outputs, per token per layer
+        mp = self.model_shards
+        dv = (self.cfg.mla.v_head_dim if self.cfg.mla is not None
+              else self.cfg.head_dim)
+        # layers whose arenas are head-sharded pay the per-head output
+        # concat: exact for the shard_map'd tiers, a LOWER BOUND for T3
+        # retrieval (GSPMD chooses its own collectives there). The CPQ-X
+        # tiers replicate their code pools and are not charged — their
+        # residual k_rope movement is unmodeled.
+        n_concat = sum(
+            1 for m, _ in self.cfg.layer_kinds
+            if (m == "attn" and (self.tiered or self.rt.mode in
+                                 ("dense", "cpq", "decomposed", "retrieval")))
+            or (m == "mla" and self.rt.mode != "cpq"))
+        concat_bpt = (0.0 if mp <= 1 else
+                      (mp - 1) / mp * self.cfg.num_heads * dv
+                      * self.cfg.param_dtype.itemsize * n_concat)
+        # ...plus, for storage-sharded latent tiers (T1 X / MLA c_kv), the
+        # per-invocation pool all-gather — charged per model invocation, not
+        # per token (zero for head-sharded tiers and unsharded engines)
+        gather_bps = self._latent_gather_bytes_per_step(caches)
 
         B = self.serving.num_slots
         last_tok = np.zeros((B,), np.int32)
@@ -314,8 +372,9 @@ class ContinuousServeEngine:
         step = 0                     # model-invocation tick clock
         decode_steps = live_steps = prefill_chunks = 0
         prefill_tokens = generated = 0
-        traffic = prefill_write_bytes = 0.0
+        traffic = prefill_write_bytes = interconnect = 0.0
         util_peak, util_sum, util_n = 0.0, 0.0, 0
+        defrag_mark = 0              # retirements at the last compaction
         t0 = time.time()
 
         def result_of(req: Request) -> dict:
@@ -358,6 +417,17 @@ class ContinuousServeEngine:
                 finish(req, "max_tokens")
 
         while sched.has_work():
+            # 0) periodic base-arena compaction (defrag_every retirements):
+            #    the scheduler relabels mapped pages onto the lowest ids and
+            #    the jitted permutation moves every base page pool to match
+            if (self.serving.defrag_every
+                    and sched.stats["retired"] - defrag_mark
+                    >= self.serving.defrag_every):
+                defrag_mark = sched.stats["retired"]
+                perm = sched.plan_defrag()
+                if perm is not None:
+                    caches = self._defrag(caches, jnp.asarray(perm))
+
             # 1) admissions into vacated slots. Chunked (default): the slot
             #    enters the prefilling state and its prompt streams below.
             #    One-shot oracle: prefill the whole context now and charge
@@ -368,6 +438,11 @@ class ContinuousServeEngine:
                 key, sub = jax.random.split(key)
                 caches, tok, padded = self._admit(req, sched, caches, sub, gen)
                 step += -(-padded // quantum)   # monolithic prefill stall
+                # no interconnect charge: the one-shot prefill runs as a
+                # replicated global jit (no shard_map), so under a mesh it
+                # pays mp-fold redundant FLOPs instead of concat traffic;
+                # the pack then writes each device's arena slice from the
+                # locally-present replicated payload
                 prefill_tokens += req.length
                 prefill_write_bytes += (req.length
                                         * (bpt1 if req.tier else bpt0)
@@ -400,6 +475,7 @@ class ContinuousServeEngine:
                 prefill_tokens += valid
                 prefill_write_bytes += (valid * (bpt1 if req.tier else bpt0)
                                         * self._n_cache_layers)
+                interconnect += valid * concat_bpt + gather_bps
                 if tok is not None:
                     # the final chunk runs during THIS tick: its first token
                     # is available at the tick's end (step + 1), and the row
@@ -470,6 +546,7 @@ class ContinuousServeEngine:
             traffic += float(sum(
                 (sched.lengths[s] + 1.0) * (bpt1 if tier_arr[s] else bpt0)
                 for s in range(B) if active[s])) * self._n_cache_layers
+            interconnect += int(active.sum()) * concat_bpt + gather_bps
             util = sched.dense_alloc.utilization
             util_peak = max(util_peak, util)
             util_sum += util
@@ -482,10 +559,17 @@ class ContinuousServeEngine:
                 emit_token(sched.slots[slot], int(toks[slot]), step, grow=True)
 
         wall = time.time() - t0
+        total_bytes = pgc.arena_bytes(caches)
+        device_bytes = self._per_device_arena_bytes(caches, total_bytes)
         stats = {
             "cache_mode": self.rt.mode,
             "tiered": self.tiered,
             "chunked_prefill": self.chunked,
+            "model_shards": self.model_shards,
+            "arena_bytes_total": total_bytes,
+            "arena_bytes_per_device": device_bytes,
+            "interconnect_bytes": interconnect,
+            "interconnect_bytes_per_token": interconnect / max(generated, 1),
             "decode_steps": decode_steps,
             "prefill_chunks": prefill_chunks,
             "prefill_tokens": prefill_tokens,
@@ -503,8 +587,43 @@ class ContinuousServeEngine:
             "dense_pages_leaked": sched.dense_alloc.num_used,
             "cpq_pages_leaked": sched.cpq_alloc.num_used if sched.cpq_alloc else 0,
             **sched.stats,
+            # public allocator surface (utilization + defrag counts): what
+            # bench_serving and the sharded watermark read instead of the
+            # private dense_alloc/cpq_alloc state
+            **sched.arena_stats(),
         }
         return results, stats
+
+    def _latent_gather_bytes_per_step(self, caches) -> float:
+        """Interconnect bytes ONE model invocation moves re-assembling the
+        storage-sharded latent pools (PagedXCache.x all-gather inside the
+        shard_map, serving/sharded.py): each device ships its feature shard
+        to the mp-1 others, per latent cache layer. Zero when unsharded.
+        This dwarfs the per-head output concat — the price of latent
+        HBM-capacity sharding paid on every step (gathering only mapped
+        pages is the open optimization, see ROADMAP)."""
+        mp = self.model_shards
+        if mp <= 1:
+            return 0.0
+        total = 0
+        for c in caches["prefix"] + caches["blocks"]:
+            if isinstance(c, pgc.PagedXCache) and c.x.shape[-1] % mp == 0:
+                total += c.x.size * c.x.dtype.itemsize  # stacked axis included
+        return total * (mp - 1) / mp
+
+    def _per_device_arena_bytes(self, caches, total_bytes: int) -> float:
+        """Physical arena bytes each device holds (sharded leaves shrink,
+        replicated leaves don't) — the HBM-capacity win the kv-head
+        partitioning exists for."""
+        if self.mesh is None:
+            return float(total_bytes)
+        import math
+
+        def leaf_bytes(a, ns) -> float:
+            return math.prod(ns.shard_shape(a.shape)) * a.dtype.itemsize
+
+        return float(sum(jax.tree.leaves(
+            jax.tree.map(leaf_bytes, caches, self._cache_shardings))))
 
     def generate(self, batch: dict, gen: GenerationConfig = GenerationConfig()):
         """Static-engine-compatible convenience: one batch of equal-priority

@@ -164,6 +164,11 @@ class PageAllocator:
             assert p not in self._free, f"double free of page {p}"
             self._free.append(int(p))
 
+    def reset_free(self, free: list[int]) -> None:
+        """Install a rebuilt free list (defrag: page ids were relabeled)."""
+        assert len(free) == len(self._free), (len(free), len(self._free))
+        self._free = [int(p) for p in free]
+
 
 def pages_needed(tokens: int, page_size: int) -> int:
     return -(-int(tokens) // page_size)
@@ -197,6 +202,36 @@ def defrag_plan(block_table, num_pages: int):
     new_bt = np.array([[remap[int(p)] for p in row] for row in bt], dtype=bt.dtype)
     free = list(range(num_pages - 1, len(used), -1))  # pop() hands out low ids
     return np.asarray(perm, dtype=np.int32), new_bt, free
+
+
+def permute_pool(cache: "PagedCache", perm: jax.Array) -> "PagedCache":
+    """Apply a defrag permutation (``perm[new_id] = old_id``) to every
+    BASE-arena page pool of a paged container; per-slot side state and the
+    tiered CPQ escalation arena (its own allocator/tables) are untouched.
+    Works identically on sharded pools: the pool axis is never partitioned,
+    so the take is local on every device."""
+    def pcpq(t: PagedCPQTensor) -> PagedCPQTensor:
+        return t._replace(codes=jnp.take(t.codes, perm, axis=0),
+                          level=jnp.take(t.level, perm, axis=0))
+
+    if isinstance(cache, TieredPagedCache):
+        return cache._replace(dense=permute_pool(cache.dense, perm))
+    if isinstance(cache, PagedDenseKVCache):
+        return PagedDenseKVCache(k=jnp.take(cache.k, perm, axis=0),
+                                 v=jnp.take(cache.v, perm, axis=0))
+    if isinstance(cache, PagedXCache):
+        return PagedXCache(x=jnp.take(cache.x, perm, axis=0),
+                           k_rope=jnp.take(cache.k_rope, perm, axis=0))
+    if isinstance(cache, PagedCPQKVCache):
+        return PagedCPQKVCache(k=pcpq(cache.k), v=pcpq(cache.v))
+    if isinstance(cache, PagedRetrievalCache):
+        return cache._replace(k=jnp.take(cache.k, perm, axis=0),
+                              v=jnp.take(cache.v, perm, axis=0),
+                              proxy=jnp.take(cache.proxy, perm, axis=0))
+    if isinstance(cache, PagedCPQXCache):
+        return PagedCPQXCache(x=pcpq(cache.x),
+                              k_rope=jnp.take(cache.k_rope, perm, axis=0))
+    raise TypeError(type(cache))
 
 
 # ------------------------------------------------------------- paged containers
@@ -578,6 +613,20 @@ def chunk_attend_paged(
     from repro.kernels.decomposed_attn.ops import paged_decomposed_prefill_tpu
     from repro.kernels.flash_attn.ops import paged_flash_prefill_tpu
 
+    if getattr(rt, "mesh", None) is not None:
+        from repro.serving import sharded
+
+        if sharded.supports(cache):
+            return sharded.chunk_attend_sharded(
+                rt, cache, tier=tier, first=first, slot=slot,
+                block_row=block_row, offset=offset, valid=valid, q=q, k_c=k_c,
+                v_c=v_c, x_c=x_c, k_rope_c=k_rope_c, q_nope=q_nope,
+                q_rope=q_rope, w_k_nope=w_k_nope, w_v=w_v, scale=scale)
+        # T3 / T1+T2 keep global-semantics compute over (possibly storage-
+        # sharded) arenas — GSPMD inserts the gathers
+        import dataclasses as _dc
+        rt = _dc.replace(rt, mesh=None)
+
     fused = rt.paged_kernels
     total = offset + valid
     qpos = offset + jnp.arange(q.shape[1], dtype=jnp.int32)
@@ -777,6 +826,19 @@ def decode_attend_paged(
     from repro.kernels.cpq_dequant_attn.ops import paged_cpq_decode_tpu
     from repro.kernels.decomposed_attn.ops import paged_decomposed_decode_tpu
     from repro.kernels.flash_attn.ops import paged_flash_decode_tpu
+
+    if getattr(rt, "mesh", None) is not None:
+        from repro.serving import sharded
+
+        if sharded.supports(cache):
+            return sharded.decode_attend_sharded(
+                rt, cache, rows, q=q, k_t=k_t, v_t=v_t, x_t=x_t,
+                k_rope_t=k_rope_t, q_nope=q_nope, q_rope=q_rope,
+                w_k_nope=w_k_nope, w_v=w_v, scale=scale)
+        # T3 / T1+T2 keep global-semantics compute over (possibly storage-
+        # sharded) arenas — GSPMD inserts the gathers
+        import dataclasses as _dc
+        rt = _dc.replace(rt, mesh=None)
 
     fused = rt.paged_kernels
     new_len = rows.lengths + rows.active.astype(jnp.int32)

@@ -41,7 +41,8 @@ from typing import Optional
 import numpy as np
 
 from repro.configs.base import ServingCfg
-from repro.serving.paged_cache import NULL_PAGE, PageAllocator, pages_needed
+from repro.serving.paged_cache import (NULL_PAGE, PageAllocator, defrag_plan,
+                                       pages_needed)
 
 
 class SchedulerConfigError(ValueError):
@@ -100,7 +101,7 @@ class Scheduler:
         self.lengths = np.zeros((S,), np.int32)
         self.tiers = np.zeros((S,), np.int32)
         self.stats = {"admitted": 0, "retired": 0, "preemptions": 0,
-                      "escalations": 0, "peak_dense_pages": 0}
+                      "escalations": 0, "peak_dense_pages": 0, "defrags": 0}
 
     # ------------------------------------------------------------- queries
 
@@ -127,6 +128,44 @@ class Scheduler:
 
     def free_frac(self) -> float:
         return self.dense_alloc.num_free / max(self.dense_alloc.num_pages - 1, 1)
+
+    def arena_stats(self) -> dict:
+        """Public allocator/defrag counters (the engine folds these into its
+        serve() stats; bench_serving and the sharded watermark read them here
+        instead of reaching into ``dense_alloc`` / ``cpq_alloc``). All counts
+        are LOGICAL pages — under a model-sharded mesh every logical page is
+        one per-device slice, so fractions (and the watermark thresholds
+        derived from them) are mesh-invariant."""
+        out = {
+            "dense_pages_used": self.dense_alloc.num_used,
+            "dense_pages_free": self.dense_alloc.num_free,
+            "dense_arena_utilization": self.dense_alloc.utilization,
+            "defrags": self.stats["defrags"],
+        }
+        if self.cpq_alloc is not None:
+            out["cpq_pages_used"] = self.cpq_alloc.num_used
+            out["cpq_arena_utilization"] = self.cpq_alloc.utilization
+        return out
+
+    def plan_defrag(self):
+        """Compact the BASE (dense-tier) arena: relabel every mapped page
+        onto the lowest physical ids (paged_cache.defrag_plan), rewrite the
+        block tables and every tier-0 request's page list, and rebuild the
+        allocator free list. Returns the (num_pages,) permutation to apply
+        to every base-arena page pool (``perm[new_id] = old_id``), or None
+        when the arena is already compact. Escalated (tier-1) pages live in
+        the CPQ arena and are untouched."""
+        perm, new_bt, free = defrag_plan(self.block_tables, self.cfg.num_pages)
+        if all(int(p) == i for i, p in enumerate(perm)):
+            return None
+        remap = {int(old): new for new, old in enumerate(perm)}
+        self.block_tables[:] = new_bt
+        for r in self.occupied():
+            if r.tier == 0:
+                r.pages = [remap[int(p)] for p in r.pages]
+        self.dense_alloc.reset_free(free)
+        self.stats["defrags"] += 1
+        return perm
 
     def _arena(self, tier: int) -> PageAllocator:
         return self.cpq_alloc if tier == 1 else self.dense_alloc
