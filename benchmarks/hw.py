@@ -18,6 +18,13 @@ class Device:
     mem_pj_per_byte: float   # off-chip access energy
     mac_pj: float            # energy per MAC (2 FLOPs)
     power_w: float           # board power (throughput/W comparisons)
+    # static/leakage board power burned regardless of slot occupancy —
+    # what a serving step pays for its IDLE rows (charged against the
+    # measured slot-utilization trace in bench_e2e_energy). Rough
+    # ~30% -of-board figures for the accelerators (clock gating leaves
+    # leakage + HBM refresh + interconnect idle), lower for the FPGA/CIM
+    # parts whose static share is small by construction.
+    idle_w: float = 0.0
 
 
 TPU_V5E = Device(
@@ -27,6 +34,7 @@ TPU_V5E = Device(
     mem_pj_per_byte=30.0,     # ~3.75 pJ/bit HBM2e class
     mac_pj=0.56,              # ~220W core budget / 197 TFLOP/s (2 FLOP/MAC)
     power_w=220.0,
+    idle_w=66.0,
 )
 
 ICI_BW = 50e9        # bytes/s per link, v5e
@@ -39,6 +47,7 @@ A100 = Device(
     mem_pj_per_byte=35.0,
     mac_pj=1.3,               # ~400W / 312 TFLOP/s
     power_w=400.0,
+    idle_w=110.0,
 )
 
 FLIGHTLLM = Device(
@@ -48,6 +57,7 @@ FLIGHTLLM = Device(
     mem_pj_per_byte=35.0,
     mac_pj=2.0,
     power_w=45.0,
+    idle_w=8.0,
 )
 
 # The paper's ReRAM/DCIM design: weights stationary in CIM macros (near-zero
@@ -60,4 +70,5 @@ PIM = Device(
     mem_pj_per_byte=30.0,
     mac_pj=0.022,             # 89 TOPS/W digital CIM
     power_w=25.0,
+    idle_w=3.0,
 )

@@ -124,7 +124,17 @@ class ServingCfg:
     escalated_pages: int = 65      # CPQ arena pages (tiered engines only)
     low_watermark: float = 0.25
     critical_watermark: float = 0.10
+    # recovery threshold: when the dense free fraction climbs back ABOVE
+    # this, policies with de-escalation enabled restore escalated (T2) rows
+    # to the dense tier via chunked re-admission (hysteresis: must be >= low;
+    # the 1.0 default can never be exceeded, so recovery is opt-in)
+    high_watermark: float = 1.0
     enable_escalation: bool = False
+    # admission/preemption/escalation decision policy (serving/policies.py):
+    # fifo (default; decision-identical to the pre-policy scheduler) |
+    # priority (strict SloClass levels + aging) | slo (TTFT-slack EDF
+    # admission + de-escalation). An engine ``policy=`` object overrides it.
+    policy: str = "fifo"
     prefill_bucket: int = 16       # prompts padded up to a multiple of this
     # chunked paged prefill (the DEFAULT admission path): prompts stream into
     # their slot's arena pages in page-aligned chunks of this many tokens,
@@ -146,6 +156,8 @@ class ServingCfg:
         assert self.num_pages >= 2 and self.escalated_pages >= 2
         assert self.page_size >= 1 and self.num_slots >= 1
         assert 0.0 <= self.critical_watermark <= self.low_watermark <= 1.0
+        assert self.low_watermark <= self.high_watermark <= 1.0
+        assert self.policy in ("fifo", "priority", "slo"), self.policy
         assert self.prefill_bucket >= 1
         assert self.prefill_chunk >= 0
         assert self.defrag_every >= 0

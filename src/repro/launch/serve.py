@@ -45,6 +45,13 @@ def main(argv=None):
                     help="chunked paged prefill: prompts stream into arena "
                          "pages in chunks of this many tokens, interleaved "
                          "with decode (page-aligned; 0 = one-shot admission)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "priority", "slo"],
+                    help="scheduler policy (serving/policies.py): fifo = "
+                         "arrival order (default), priority = strict "
+                         "SloClass levels + aging, slo = TTFT-slack EDF "
+                         "admission with T2->dense de-escalation "
+                         "(requires --continuous)")
     ap.add_argument("--mesh", default=None, metavar="dp,mp",
                     help="serve over a device mesh: dp-way engine replication"
                          " x mp-way model sharding of the paged arenas "
@@ -65,6 +72,9 @@ def main(argv=None):
     batch.pop("labels")
     batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
 
+    if args.policy != "fifo" and not args.continuous:
+        ap.error("--policy requires --continuous (the static engine has no "
+                 "admission queue)")
     mesh = None
     if args.mesh:
         if not args.continuous:
@@ -83,9 +93,9 @@ def main(argv=None):
             num_slots=args.batch, page_size=16,
             num_pages=args.batch * pages_needed(n_max, 16) + 1,
             max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16,
-            prefill_chunk=args.prefill_chunk)
+            prefill_chunk=args.prefill_chunk, policy=args.policy)
         eng = ContinuousServeEngine(cfg, params, serving=serving, mesh=mesh)
-        print(f"[serve] chunked prefill: "
+        print(f"[serve] policy={args.policy}; chunked prefill: "
               f"{'on, chunk=' + str(args.prefill_chunk) if eng.chunked else 'off (one-shot admission)'}")
         if mesh is not None:
             print(f"[serve] mesh: data={mesh.shape['data']} "

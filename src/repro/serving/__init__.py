@@ -3,8 +3,14 @@
 Modules:
   paged_cache — block-paged arenas for the five cache tiers (leaf module;
                 imported by models/* for the paged decode path)
-  scheduler   — host-side admission queue, slot table, watermark policy
+  request     — the public request-centric API dataclasses (SamplingParams,
+                SloClass, ServeRequest, RequestOutput)
+  policies    — pluggable SchedulerPolicy implementations (fifo / priority /
+                slo-aware with de-escalation)
+  scheduler   — host-side admission queue, slot table, watermark mechanisms
   engine      — ServeEngine (static batch) + ContinuousServeEngine
+                (add_request()/step() streaming interface; serve()/generate()
+                batch wrappers)
 
 Engine symbols are re-exported lazily (PEP 562) so importing
 ``repro.serving.paged_cache`` from the model stack does not recurse through
@@ -13,8 +19,13 @@ the engine -> model import chain.
 
 _ENGINE_EXPORTS = ("GenerationConfig", "ServeEngine", "ContinuousServeEngine")
 _SCHEDULER_EXPORTS = ("Request", "Scheduler", "SchedulerConfigError")
+_REQUEST_EXPORTS = ("SamplingParams", "SloClass", "ServeRequest",
+                    "RequestOutput", "INTERACTIVE", "STANDARD", "BATCH")
+_POLICY_EXPORTS = ("SchedulerPolicy", "FifoPolicy", "PriorityPolicy",
+                   "SloAwarePolicy", "make_policy")
 
-__all__ = list(_ENGINE_EXPORTS + _SCHEDULER_EXPORTS)
+__all__ = list(_ENGINE_EXPORTS + _SCHEDULER_EXPORTS + _REQUEST_EXPORTS
+               + _POLICY_EXPORTS)
 
 
 def __getattr__(name):
@@ -24,4 +35,10 @@ def __getattr__(name):
     if name in _SCHEDULER_EXPORTS:
         from repro.serving import scheduler
         return getattr(scheduler, name)
+    if name in _REQUEST_EXPORTS:
+        from repro.serving import request
+        return getattr(request, name)
+    if name in _POLICY_EXPORTS:
+        from repro.serving import policies
+        return getattr(policies, name)
     raise AttributeError(name)

@@ -1,7 +1,5 @@
 """Serving engines: the paper's end-to-end inference path.
 
-Two engines share the sampling / generation config machinery:
-
 ``ServeEngine`` — the original static-batch engine (kept as the back-compat
 baseline and as the benchmark foil): one right-padded batch runs prefill then
 a jitted decode loop to completion; every row owns a contiguous
@@ -11,17 +9,35 @@ a jitted decode loop to completion; every row owns a contiguous
 (serving/paged_cache.py) driven by the host-side scheduler
 (serving/scheduler.py): requests are admitted into vacated slots as soon as
 pages are free, every row decodes at its own position (one jitted step over
-per-row lengths), rows retire at EOS and free their pages immediately, and
-the memory watermark policy escalates cache tiers (dense -> T2 CPQ) under
-pressure — the paper's "dynamically compress and prune" story operationalized
-at the request level.
+per-row lengths), rows retire at EOS / stop tokens and free their pages
+immediately, and the memory watermark policy escalates cache tiers
+(dense -> T2 CPQ) under pressure — the paper's "dynamically compress and
+prune" story operationalized at the request level.
+
+The continuous engine's primary interface is request-centric (vLLM-style):
+
+    eng.add_request(ServeRequest(prompt, sampling=SamplingParams(...),
+                                 slo=INTERACTIVE), stream=callback)
+    while eng.has_unfinished():
+        for out in eng.step():        # one tick; incremental RequestOutputs
+            ...
+
+Sampling is per request — ``SamplingParams`` vectorize into per-row
+temperature/top-k/top-p/seed arrays consumed by ONE jitted sampler
+(``sample_token_rows``); greedy rows take the same argmax as ever,
+bit-identically. Scheduling decisions (admission order, tier assignment,
+preemption victims, escalation / de-escalation) come from the pluggable
+``SchedulerPolicy`` (serving/policies.py). ``serve(requests, gen)`` and
+``generate(batch, gen)`` remain as thin batch-shaped wrappers over
+add_request()/step() — their greedy outputs are token-identical to the
+pre-request-API engine.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from functools import partial
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +46,7 @@ import numpy as np
 from repro.configs.base import AttentionRuntime, CPQCfg, ModelConfig, ServingCfg
 from repro.models import model as M
 from repro.serving import paged_cache as pgc
+from repro.serving.request import RequestOutput, SamplingParams, ServeRequest
 from repro.serving.scheduler import Request, Scheduler, SchedulerConfigError
 
 
@@ -55,6 +72,42 @@ def sample_tokens(logits: jax.Array, key, gen: GenerationConfig) -> jax.Array:
         thresh = jnp.take_along_axis(sorted_l, k, axis=-1)
         logits = jnp.where(logits < thresh, -1e30, logits)
     return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+def sample_token_rows(logits: jax.Array, temps: jax.Array, top_ks: jax.Array,
+                      top_ps: jax.Array, seeds: jax.Array,
+                      indices: jax.Array) -> jax.Array:
+    """Vectorized per-request sampler: (B, V) logits + per-row (B,) arrays of
+    temperature / top-k / top-p / seed -> (B,) int32 tokens, one jitted call
+    for the whole mixed batch.
+
+    Greedy rows (``temps <= 0``) take ``jnp.argmax`` over the unmodified
+    logits — bit-identical to the engine-global greedy path. Sampled rows
+    filter per row (``top_k == 0`` / ``top_p == 1`` disable a filter) and
+    draw with ``fold_in(PRNGKey(seed_r), index_r)`` where ``indices`` is the
+    token's position in the request's generated stream: the draw is a
+    function of the request alone — independent of slot placement, the
+    co-resident batch, and preemption history (recompute replays the same
+    keys)."""
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / jnp.where(temps > 0, temps, 1.0)[:, None]
+    # per-row top-k: mask everything below the k-th largest (k = V when off)
+    desc = jnp.sort(l, axis=-1)[:, ::-1]
+    k = jnp.clip(jnp.where(top_ks > 0, top_ks, V), 1, V)
+    kth = jnp.take_along_axis(desc, (k - 1)[:, None], axis=-1)
+    l = jnp.where(l < kth, -1e30, l)
+    # per-row top-p over the top-k-filtered distribution (same nucleus
+    # construction as the legacy global sampler)
+    desc = jnp.sort(l, axis=-1)[:, ::-1]
+    cum = jnp.cumsum(jax.nn.softmax(desc, axis=-1), axis=-1)
+    j = jnp.sum(cum < top_ps[:, None], axis=-1, keepdims=True)
+    thresh = jnp.take_along_axis(desc, j, axis=-1)  # jax clamps j == V
+    l = jnp.where(l < thresh, -1e30, l)
+    keys = jax.vmap(lambda s, i: jax.random.fold_in(jax.random.PRNGKey(s), i))(
+        seeds, indices)
+    sampled = jax.vmap(jax.random.categorical)(keys, l).astype(jnp.int32)
+    return jnp.where(temps <= 0.0, greedy, sampled)
 
 
 # --------------------------------------------------------------- static engine
@@ -124,18 +177,66 @@ class ServeEngine:
 # ----------------------------------------------------------- continuous engine
 
 
+class _ServeState:
+    """Mutable per-session serving state behind ``add_request()``/``step()``:
+    the scheduler, the paged cache pytree, per-slot sampling-parameter
+    arrays, the tick clock, counters, and the pending-output buffer. One
+    ``serve()`` call owns exactly one (it resets); step-API users keep one
+    across calls until ``reset()``."""
+
+    def __init__(self, eng: "ContinuousServeEngine", gen: "GenerationConfig"):
+        B = eng.serving.num_slots
+        self.gen = gen
+        self.sched = Scheduler(eng.serving, eng.tiered,
+                               policy=eng.make_policy())
+        self.caches = M.init_paged_caches(eng.cfg, eng.rt, eng.serving,
+                                          eng.tiered)
+        if eng.mesh is not None:
+            # place the arenas per the paged cache specs: kv-head / latent
+            # feature axes over "model", pools and slot state replicated
+            self.caches = jax.device_put(self.caches, eng._cache_shardings)
+        self.last_tok = np.zeros((B,), np.int32)
+        # per-slot sampling parameters, vectorized for the jitted sampler
+        # (rows overwritten on admission; inactive rows' samples are unused)
+        self.temp = np.zeros((B,), np.float32)
+        self.top_k = np.zeros((B,), np.int32)
+        self.top_p = np.ones((B,), np.float32)
+        self.seed = np.zeros((B,), np.int32)
+        self.results: dict[int, dict] = {}
+        self.outputs: list[RequestOutput] = []       # pending (undrained)
+        self.step_outputs: list[RequestOutput] = []  # this tick's events
+        self.next_rid = 0
+        self.step = 0                 # model-invocation tick clock
+        self.decode_steps = self.live_steps = self.prefill_chunks = 0
+        self.prefill_tokens = self.generated = 0
+        self.traffic = self.prefill_write_bytes = self.interconnect = 0.0
+        self.util_peak = self.util_sum = 0.0
+        self.util_n = 0
+        self.defrag_mark = 0          # retirements at the last compaction
+        # per-decode-tick utilization traces (active rows / arena fill) —
+        # the idle-vs-active series bench_e2e_energy's device model charges
+        self.trace_active: list[int] = []
+        self.trace_util: list[float] = []
+        self.t0 = time.time()
+
+
 class ContinuousServeEngine:
     """Continuous batching over block-paged arenas.
 
-    One engine instance holds the jitted step functions; each ``serve`` call
-    builds a fresh scheduler + paged cache pytree and drains the request list.
-    The decode clock is the simulation time base: a request with
-    ``arrival=t`` becomes admissible after t decode steps (Poisson-arrival
-    benchmarks feed arrivals in these units; online use passes 0.0).
+    One engine instance holds the jitted step functions. The request-centric
+    interface is ``add_request()`` + ``step()`` (one engine tick per call,
+    returning that tick's incremental ``RequestOutput`` events);
+    ``serve(requests, gen)`` wraps it batch-style — it resets the session,
+    submits everything, and drains. The decode clock is the simulation time
+    base: a request with ``arrival=t`` becomes admissible after t decode
+    steps (Poisson-arrival benchmarks feed arrivals in these units; online
+    use passes 0.0). ``policy`` (object, or via ``ServingCfg.policy`` name)
+    selects the scheduling policy; the default FIFO policy plus greedy
+    sampling reproduces the pre-request-API engine token-exactly.
     """
 
     def __init__(self, cfg: ModelConfig, params, rt: Optional[AttentionRuntime] = None,
-                 serving: ServingCfg = ServingCfg(), mesh=None):
+                 serving: ServingCfg = ServingCfg(), mesh=None, policy=None):
         self.cfg = cfg
         self.params = params
         self.serving = serving
@@ -206,6 +307,21 @@ class ContinuousServeEngine:
                         and not self._group_routed)
         # cache-bearing layer count for the traffic model
         self._n_cache_layers = sum(1 for m, _ in cfg.layer_kinds if m in ("attn", "mla"))
+        self.policy = policy          # object/str override of serving.policy
+        self._sample_rows = jax.jit(sample_token_rows)
+        self._st: Optional[_ServeState] = None
+
+    def make_policy(self):
+        """Resolve the scheduling policy: an explicit object wins, a string
+        (constructor arg or ``ServingCfg.policy``) goes through the
+        factory. Called once per serving session (``reset``)."""
+        from repro.serving.policies import make_policy
+
+        if self.policy is None:
+            return make_policy(self.serving.policy)
+        if isinstance(self.policy, str):
+            return make_policy(self.policy)
+        return self.policy
 
     # ------------------------------------------------------------- helpers
 
@@ -243,12 +359,13 @@ class ContinuousServeEngine:
             return ctx, S
         return np.concatenate([ctx, np.full((S_pad - S,), ctx[-1], np.int32)]), S
 
-    def _admit(self, req: Request, sched: Scheduler, caches, key, gen):
+    def _admit(self, req: Request, st: _ServeState):
         """ONE-SHOT admission (the construction-exact oracle path, selected
         by ``prefill_chunk == 0`` and kept for recurrent stacks): B=1 prefill
         of the whole context into a contiguous scratch cache, scatter-packed
-        into the slot's pages. Samples the request's first token. Returns
-        (caches, first_token, padded_len)."""
+        into the slot's pages. Samples the request's first token with its
+        own SamplingParams. Returns (first_token, padded_len)."""
+        sched = st.sched
         padded, S = self._bucketed(req.context)
         rt_t = self._rt_for_tier(req.tier)
         ctg = M.init_caches(self.cfg, rt_t, 1, len(padded))
@@ -256,17 +373,17 @@ class ContinuousServeEngine:
             self.params, {"tokens": jnp.asarray(padded[None])}, ctg,
             jnp.asarray(S - 1, jnp.int32))
         tables = sched.alt_block_tables if req.tier == 1 else sched.block_tables
-        caches = self._pack(caches, ctg, jnp.asarray(tables[req.slot]),
-                            jnp.asarray(req.slot, jnp.int32))
+        st.caches = self._pack(st.caches, ctg, jnp.asarray(tables[req.slot]),
+                               jnp.asarray(req.slot, jnp.int32))
         sched.finish_prefill(req)
-        tok = int(np.asarray(sample_tokens(logits, key, gen))[0])
-        return caches, tok, len(padded)
+        return self._sample_one(req, logits), len(padded)
 
-    def _prefill_chunk(self, req: Request, sched: Scheduler, caches, key, gen):
+    def _prefill_chunk(self, req: Request, st: _ServeState):
         """Stream the next ``prefill_chunk`` prompt tokens STRAIGHT into the
         request's arena pages (no scratch cache, no pack copy); on the final
         chunk, samples the first token from the last valid position's logits.
-        Returns (caches, first_token | None, valid_tokens_this_chunk)."""
+        Returns (first_token | None, valid_tokens_this_chunk)."""
+        sched = st.sched
         C = self.serving.prefill_chunk
         ctx = req.context
         off = req.length
@@ -276,17 +393,83 @@ class ContinuousServeEngine:
             chunk = np.concatenate(
                 [chunk, np.full((C - valid,), chunk[-1], np.int32)])
         tables = sched.alt_block_tables if req.tier == 1 else sched.block_tables
-        logits, caches = self._chunk_fn(req.tier, off == 0)(
+        logits, st.caches = self._chunk_fn(req.tier, off == 0)(
             self.params, jnp.asarray(chunk[None]),
             jnp.asarray(req.slot, jnp.int32),
             jnp.asarray(tables[req.slot]),
-            jnp.asarray(off, jnp.int32), jnp.asarray(valid, jnp.int32), caches)
+            jnp.asarray(off, jnp.int32), jnp.asarray(valid, jnp.int32),
+            st.caches)
         sched.note_chunk(req, valid)
         if req.length < req.prefill_target:
-            return caches, None, valid
+            return None, valid
         sched.finish_prefill(req)
-        tok = int(np.asarray(sample_tokens(logits, key, gen))[0])
-        return caches, tok, valid
+        return self._sample_one(req, logits), valid
+
+    # ---------------------------------------------------- per-row sampling
+
+    def _resolve_sampling(self, req: Request, st: _ServeState) -> None:
+        """Pin the request's SamplingParams (legacy Requests derive them from
+        the session GenerationConfig once, on first admission) and load them
+        into the slot's row of the vectorized sampler arrays."""
+        if req.sampling is None:
+            g = st.gen
+            req.sampling = SamplingParams(
+                temperature=g.temperature, top_p=g.top_p,
+                max_tokens=req.max_new_tokens,
+                seed=(g.seed + req.rid) & 0x7fffffff)
+        s = req.slot
+        st.temp[s] = req.sampling.temperature
+        st.top_k[s] = req.sampling.top_k
+        st.top_p[s] = req.sampling.top_p
+        st.seed[s] = req.sampling.seed & 0x7fffffff
+
+    def _place_replicated(self, tree):
+        """Sampling-parameter arrays cross a serving mesh REPLICATED (the
+        sampler runs on the already-concatenated logits; see
+        serving/sharded.py)."""
+        if self.mesh is None:
+            return tree
+        from repro.serving.sharded import replicate_on_mesh
+
+        return replicate_on_mesh(self.mesh, tree)
+
+    def _sample_one(self, req: Request, logits: jax.Array) -> int:
+        """First-token sampling at the end of a prefill: the (1, V) call of
+        the same jitted per-row sampler, at stream index ``num_generated``
+        (0 on fresh admission; the replay index after preemption, so
+        recompute re-draws identical keys). Greedy requests short-circuit
+        to the plain argmax (the legacy ops, at the legacy cost)."""
+        sp = req.sampling
+        if sp.temperature <= 0.0:
+            return int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+        args = (jnp.full((1,), sp.temperature, jnp.float32),
+                jnp.full((1,), sp.top_k, jnp.int32),
+                jnp.full((1,), sp.top_p, jnp.float32),
+                jnp.full((1,), sp.seed & 0x7fffffff, jnp.int32),
+                jnp.full((1,), req.num_generated, jnp.int32))
+        out = self._sample_rows(logits, *self._place_replicated(args))
+        return int(np.asarray(out)[0])
+
+    def _sample_active(self, st: _ServeState, logits: jax.Array) -> np.ndarray:
+        """One jitted per-row sampling call over the decode batch. Row r's
+        stream index is its request's ``num_generated`` (the index of the
+        token being drawn); inactive rows sample garbage that the caller
+        masks out, exactly as their logits always were. An all-greedy batch
+        (the default, and every legacy suite) skips the sampler entirely for
+        the single argmax the old engine ran — ``temps`` is host state, so
+        the check costs nothing and the jitted sort/softmax/categorical
+        machinery never enters the greedy hot path."""
+        if (st.temp <= 0.0).all():
+            return np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        sched = st.sched
+        idx = np.array([r.num_generated if (r := sched.slots[s]) is not None
+                        else 0 for s in range(self.serving.num_slots)],
+                       np.int32)
+        args = (jnp.asarray(st.temp), jnp.asarray(st.top_k),
+                jnp.asarray(st.top_p), jnp.asarray(st.seed),
+                jnp.asarray(idx))
+        return np.asarray(self._sample_rows(logits,
+                                            *self._place_replicated(args)))
 
     def _row_state(self, sched: Scheduler, active=None) -> pgc.RowState:
         return pgc.RowState(
@@ -314,32 +497,16 @@ class ContinuousServeEngine:
             return b, b
         return 0.0, 0.0
 
-    # ----------------------------------------------------------------- run
+    # ------------------------------------------------- request-centric API
 
-    def serve(self, requests: list[Request],
-              gen: GenerationConfig = GenerationConfig()):
-        """Drain ``requests`` (admission-queue order = list order; arrivals in
-        decode-step units must be non-decreasing). Returns (results, stats):
-        results[rid] = {tokens, finish_reason, admitted_step, done_step, ...}.
-
-        Clock model: ``step`` counts model-invocation ticks. A tick that runs
-        the jitted decode step costs 1, and one prompt chunk rides along for
-        free (the chunked-prefill interleave). The one-shot oracle path
-        charges a monolithic admission its chunk-equivalents up front —
-        ``ceil(padded_len / quantum)`` ticks during which no row decodes —
-        which is exactly the head-of-line stall chunked admission removes
-        (quantum = ``prefill_chunk`` or, on the one-shot path,
-        ``prefill_bucket``)."""
-        sched = Scheduler(self.serving, self.tiered)
-        for r in sorted(requests, key=lambda r: r.arrival):
-            sched.submit(r)
-        caches = M.init_paged_caches(self.cfg, self.rt, self.serving, self.tiered)
-        if self.mesh is not None:
-            # place the arenas per the paged cache specs: kv-head / latent
-            # feature axes over "model", pools and slot state replicated
-            caches = jax.device_put(caches, self._cache_shardings)
-        bpt0, bpt1 = self._tier_bpt(caches)
-        quantum = self.serving.prefill_chunk or self.serving.prefill_bucket
+    def reset(self, gen: GenerationConfig = GenerationConfig()) -> None:
+        """Start a fresh serving session: new scheduler (fresh policy
+        instance), empty arenas, empty output buffer. ``gen`` supplies
+        session-wide legacy defaults — ``eos_id`` and the SamplingParams
+        derived for plain scheduler ``Request`` objects."""
+        st = _ServeState(self, gen)
+        st.bpt0, st.bpt1 = self._tier_bpt(st.caches)
+        st.quantum = self.serving.prefill_chunk or self.serving.prefill_bucket
         # interconnect accounting under model sharding: each device emits its
         # per-head output partial and receives the others' — the paper's
         # "only small per-head partials cross the interconnect" measured as
@@ -357,232 +524,375 @@ class ContinuousServeEngine:
             if (m == "attn" and (self.tiered or self.rt.mode in
                                  ("dense", "cpq", "decomposed", "retrieval")))
             or (m == "mla" and self.rt.mode != "cpq"))
-        concat_bpt = (0.0 if mp <= 1 else
-                      (mp - 1) / mp * self.cfg.num_heads * dv
-                      * self.cfg.param_dtype.itemsize * n_concat)
+        st.concat_bpt = (0.0 if mp <= 1 else
+                         (mp - 1) / mp * self.cfg.num_heads * dv
+                         * self.cfg.param_dtype.itemsize * n_concat)
         # ...plus, for storage-sharded latent tiers (T1 X / MLA c_kv), the
         # per-invocation pool all-gather — charged per model invocation, not
         # per token (zero for head-sharded tiers and unsharded engines)
-        gather_bps = self._latent_gather_bytes_per_step(caches)
+        st.gather_bps = self._latent_gather_bytes_per_step(st.caches)
+        self._st = st
 
+    def _ensure_state(self) -> _ServeState:
+        if self._st is None:
+            self.reset()
+        return self._st
+
+    def add_request(self, req: Union[ServeRequest, Request], *,
+                    stream=None) -> int:
+        """Submit one request to the live session (created on first use; see
+        ``reset``). Accepts the public ``ServeRequest`` spec or a raw
+        scheduler ``Request`` (legacy). ``stream`` overrides the request's
+        per-token ``RequestOutput`` callback. Returns the request id."""
+        st = self._ensure_state()
+        if isinstance(req, ServeRequest):
+            rid = req.rid if req.rid is not None else st.next_rid
+            req = Request(rid=rid, prompt=req.prompt,
+                          max_new_tokens=req.sampling.max_tokens,
+                          arrival=req.arrival, sampling=req.sampling,
+                          slo=req.slo, stream=stream or req.stream)
+        elif stream is not None:
+            req.stream = stream
+        if (req.rid in st.results
+                or any(r.rid == req.rid for r in st.sched.queue)
+                or any(r is not None and r.rid == req.rid
+                       for r in st.sched.slots)):
+            # results and scheduler bookkeeping key on rid — a collision
+            # would silently clobber another request's record
+            raise SchedulerConfigError(
+                f"request id {req.rid} already in use this session "
+                "(omit ServeRequest.rid to auto-assign)")
+        st.next_rid = max(st.next_rid, req.rid + 1)
+        st.sched.submit(req)
+        return req.rid
+
+    def has_unfinished(self) -> bool:
+        """Whether the session still holds queued or in-flight requests."""
+        return self._st is not None and self._st.sched.has_work()
+
+    def pending_outputs(self) -> list[RequestOutput]:
+        """Drain the buffered ``RequestOutput`` events (everything committed
+        since the last drain; ``step()`` also returns its tick's events
+        directly, and per-request ``stream`` callbacks fire inline)."""
+        st = self._ensure_state()
+        out, st.outputs = st.outputs, []
+        return out
+
+    def results(self) -> dict[int, dict]:
+        """Finished-request records so far: rid -> {tokens, finish_reason,
+        admitted_step, token_steps, slo/priority metadata, ...}."""
+        return dict(self._ensure_state().results)
+
+    # ----------------------------------------------------- result plumbing
+
+    def _result_of(self, req: Request) -> dict:
+        slo = req.slo
+        return {
+            "tokens": np.asarray(req.generated, np.int32),
+            "finish_reason": req.finish_reason,
+            "arrival": req.arrival,
+            "admitted_step": req.admitted_step,
+            "first_token_step": req.first_token_step,
+            "token_steps": np.asarray(req.token_steps, np.int64),
+            "done_step": req.done_step,
+            "preemptions": req.preemptions,
+            "escalated": req.escalated,
+            "deescalations": req.deescalations,
+            "slo": slo.name if slo is not None else "standard",
+            "priority": slo.priority if slo is not None else 1,
+            "ttft_target": slo.ttft_target if slo is not None else float("inf"),
+            "itl_target": slo.itl_target if slo is not None else float("inf"),
+        }
+
+    def _clear_row_sampling(self, st: _ServeState, slot: int) -> None:
+        """Reset a vacated slot's sampler rows to greedy defaults so a
+        retired sampled request cannot keep defeating the all-greedy
+        argmax fast path (the next admission overwrites them anyway)."""
+        if slot < 0:
+            return
+        st.temp[slot] = 0.0
+        st.top_k[slot] = 0
+        st.top_p[slot] = 1.0
+        st.seed[slot] = 0
+
+    def _finish(self, st: _ServeState, req: Request, reason: str) -> None:
+        slot = req.slot
+        st.sched.retire(req, st.step, reason)
+        self._clear_row_sampling(st, slot)
+        st.results[req.rid] = self._result_of(req)
+
+    def _emit_token(self, st: _ServeState, req: Request, tok: int, tick: int,
+                    grow: bool = False) -> None:
+        """Commit one emitted token. ``tick`` is the clock value at which
+        the token became available (end-of-work convention: a token
+        produced during tick T is stamped T+1; a one-shot admission's
+        first token is stamped at the end of its charged stall).
+        ``grow`` extends the cache bookkeeping (decode tokens only —
+        the first token's position is written by its decode step).
+        A stop-token / EOS / budget hit retires the request HERE — pages
+        free immediately and the slot refills on the next tick — and the
+        final ``RequestOutput`` carries the finish reason."""
+        req.generated.append(tok)
+        req.token_steps.append(tick)
+        if grow:
+            req.length += 1
+            st.sched.lengths[req.slot] += 1
+        st.last_tok[req.slot] = tok
+        st.generated += 1
+        if req.first_token_step < 0:
+            req.first_token_step = tick
+        reason = ""
+        if st.gen.eos_id >= 0 and tok == st.gen.eos_id:
+            reason = "eos"
+        elif tok in req.stop_ids:
+            reason = "stop"
+        elif req.num_generated >= req.max_new_tokens:
+            reason = "max_tokens"
+        if reason:
+            self._finish(st, req, reason)
+        ev = RequestOutput(rid=req.rid, token=int(tok),
+                           index=req.num_generated - 1, step=tick,
+                           finished=bool(reason), finish_reason=reason)
+        st.step_outputs.append(ev)
+        st.outputs.append(ev)
+        if req.stream is not None:
+            req.stream(ev)
+
+    # ----------------------------------------------------------------- run
+
+    def step(self) -> list[RequestOutput]:
+        """Run ONE engine tick: admissions, the watermark escalation /
+        recovery policy, at most one streamed prompt chunk, page growth
+        (preemption on exhaustion), and one jitted decode step + per-row
+        sampling over the running rows. Returns this tick's incremental
+        ``RequestOutput`` events (also buffered for ``pending_outputs``).
+
+        Clock model: ``step`` counts model-invocation ticks. A tick that
+        runs the jitted decode step costs 1, and one prompt chunk rides
+        along for free (the chunked-prefill interleave). The one-shot
+        oracle path charges a monolithic admission its chunk-equivalents up
+        front — ``ceil(padded_len / quantum)`` ticks during which no row
+        decodes — which is exactly the head-of-line stall chunked admission
+        removes (quantum = ``prefill_chunk`` or, on the one-shot path,
+        ``prefill_bucket``)."""
+        st = self._ensure_state()
+        st.step_outputs = []
+        sched = st.sched
+        if not sched.has_work():
+            return []
         B = self.serving.num_slots
-        last_tok = np.zeros((B,), np.int32)
-        key = jax.random.PRNGKey(gen.seed)
-        results: dict[int, dict] = {}
-        step = 0                     # model-invocation tick clock
-        decode_steps = live_steps = prefill_chunks = 0
-        prefill_tokens = generated = 0
-        traffic = prefill_write_bytes = interconnect = 0.0
-        util_peak, util_sum, util_n = 0.0, 0.0, 0
-        defrag_mark = 0              # retirements at the last compaction
-        t0 = time.time()
 
-        def result_of(req: Request) -> dict:
-            return {
-                "tokens": np.asarray(req.generated, np.int32),
-                "finish_reason": req.finish_reason,
-                "arrival": req.arrival,
-                "admitted_step": req.admitted_step,
-                "first_token_step": req.first_token_step,
-                "token_steps": np.asarray(req.token_steps, np.int64),
-                "done_step": req.done_step,
-                "preemptions": req.preemptions,
-                "escalated": req.escalated,
-            }
+        # 0) periodic base-arena compaction (defrag_every retirements):
+        #    the scheduler relabels mapped pages onto the lowest ids and
+        #    the jitted permutation moves every base page pool to match
+        if (self.serving.defrag_every
+                and sched.stats["retired"] - st.defrag_mark
+                >= self.serving.defrag_every):
+            st.defrag_mark = sched.stats["retired"]
+            perm = sched.plan_defrag()
+            if perm is not None:
+                st.caches = self._defrag(st.caches, jnp.asarray(perm))
 
-        def finish(req: Request, reason: str):
-            sched.retire(req, step, reason)
-            results[req.rid] = result_of(req)
+        # 1) admissions into vacated slots (the POLICY picks who and which
+        #    tier). Chunked (default): the slot enters the prefilling state
+        #    and its prompt streams below. One-shot oracle: prefill the
+        #    whole context now and charge the clock its chunk-equivalents
+        #    (the head-of-line stall).
+        while (req := sched.admit_next(now=st.step, step=st.step)) is not None:
+            self._resolve_sampling(req, st)
+            if self.chunked:
+                continue  # pump below interleaves one chunk per tick
+            tok, padded = self._admit(req, st)
+            st.step += -(-padded // st.quantum)  # monolithic prefill stall
+            # no interconnect charge: the one-shot prefill runs as a
+            # replicated global jit (no shard_map), so under a mesh it
+            # pays mp-fold redundant FLOPs instead of concat traffic;
+            # the pack then writes each device's arena slice from the
+            # locally-present replicated payload
+            st.prefill_tokens += req.length
+            st.prefill_write_bytes += (req.length
+                                       * (st.bpt1 if req.tier else st.bpt0)
+                                       * self._n_cache_layers)
+            self._emit_token(st, req, tok, st.step)  # ready after the stall
 
-        def emit_token(req: Request, tok: int, tick: int, grow: bool = False):
-            """Commit one emitted token. ``tick`` is the clock value at which
-            the token became available (end-of-work convention: a token
-            produced during tick T is stamped T+1; a one-shot admission's
-            first token is stamped at the end of its charged stall).
-            ``grow`` extends the cache bookkeeping (decode tokens only —
-            the first token's position is written by its decode step)."""
-            nonlocal generated
-            req.generated.append(tok)
-            req.token_steps.append(tick)
-            if grow:
-                req.length += 1
-                sched.lengths[req.slot] += 1
-            last_tok[req.slot] = tok
-            generated += 1
-            if req.first_token_step < 0:
-                req.first_token_step = tick
-            if gen.eos_id >= 0 and tok == gen.eos_id:
-                finish(req, "eos")
-            elif req.num_generated >= req.max_new_tokens:
-                finish(req, "max_tokens")
+        # 2) watermark policy: escalate running dense requests under
+        #    critical memory pressure (dense -> T2, pages freed)
+        while (cand := sched.escalation_candidate()) is not None:
+            slot, length = cand.slot, cand.length
+            dense_row, cpq_row = sched.apply_escalation(cand)
+            st.caches = self._escalate(st.caches, jnp.asarray(dense_row),
+                                       jnp.asarray(cpq_row),
+                                       jnp.asarray(slot, jnp.int32),
+                                       jnp.asarray(length, jnp.int32))
 
-        while sched.has_work():
-            # 0) periodic base-arena compaction (defrag_every retirements):
-            #    the scheduler relabels mapped pages onto the lowest ids and
-            #    the jitted permutation moves every base page pool to match
-            if (self.serving.defrag_every
-                    and sched.stats["retired"] - defrag_mark
-                    >= self.serving.defrag_every):
-                defrag_mark = sched.stats["retired"]
-                perm = sched.plan_defrag()
-                if perm is not None:
-                    caches = self._defrag(caches, jnp.asarray(perm))
+        # 2b) recovery: when the dense free fraction sits above the HIGH
+        #     watermark, the policy may de-escalate ONE T2 row per tick
+        #     back to dense via chunked re-admission (bounded churn; CPQ
+        #     codes are lossy, so the dense K/V is rebuilt by exact
+        #     context replay through the admission path)
+        if (cand := sched.deescalation_candidate()) is not None:
+            slot = cand.slot
+            sched.deescalate(cand)
+            self._clear_row_sampling(st, slot)
 
-            # 1) admissions into vacated slots. Chunked (default): the slot
-            #    enters the prefilling state and its prompt streams below.
-            #    One-shot oracle: prefill the whole context now and charge
-            #    the clock its chunk-equivalents (the head-of-line stall).
-            while (req := sched.admit_next(now=step, step=step)) is not None:
-                if self.chunked:
-                    continue  # pump below interleaves one chunk per tick
-                key, sub = jax.random.split(key)
-                caches, tok, padded = self._admit(req, sched, caches, sub, gen)
-                step += -(-padded // quantum)   # monolithic prefill stall
-                # no interconnect charge: the one-shot prefill runs as a
-                # replicated global jit (no shard_map), so under a mesh it
-                # pays mp-fold redundant FLOPs instead of concat traffic;
-                # the pack then writes each device's arena slice from the
-                # locally-present replicated payload
-                prefill_tokens += req.length
-                prefill_write_bytes += (req.length
-                                        * (bpt1 if req.tier else bpt0)
-                                        * self._n_cache_layers)
-                emit_token(req, tok, step)      # available after the stall
+        # 3) chunked-prefill pump: at most ONE prompt chunk per tick
+        #    (the per-step prefill token budget), written straight into
+        #    the slot's arena pages and interleaved with the decode step
+        #    below — long prompts no longer freeze running rows
+        did_chunk = False
+        fresh_slot = -1  # row whose prefill finished THIS tick
+        if self.chunked and (pre := sched.prefilling()):
+            req = pre[0]
+            tok, valid = self._prefill_chunk(req, st)
+            did_chunk = True
+            st.prefill_chunks += 1
+            st.prefill_tokens += valid
+            st.prefill_write_bytes += (valid
+                                       * (st.bpt1 if req.tier else st.bpt0)
+                                       * self._n_cache_layers)
+            st.interconnect += valid * st.concat_bpt + st.gather_bps
+            if tok is not None:
+                # the final chunk runs during THIS tick: its first token
+                # is available at the tick's end (step + 1), and the row
+                # joins the decode batch from the NEXT tick
+                self._emit_token(st, req, tok, st.step + 1)
+                if req.state == "running":
+                    fresh_slot = req.slot
 
-            # 2) watermark policy: escalate running dense requests under
-            #    critical memory pressure (dense -> T2, pages freed)
-            while (cand := sched.escalation_candidate()) is not None:
-                slot, length = cand.slot, cand.length
-                dense_row, cpq_row = sched.apply_escalation(cand)
-                caches = self._escalate(caches, jnp.asarray(dense_row),
-                                        jnp.asarray(cpq_row),
-                                        jnp.asarray(slot, jnp.int32),
-                                        jnp.asarray(length, jnp.int32))
-
-            # 3) chunked-prefill pump: at most ONE prompt chunk per tick
-            #    (the per-step prefill token budget), written straight into
-            #    the slot's arena pages and interleaved with the decode step
-            #    below — long prompts no longer freeze running rows
-            did_chunk = False
-            fresh_slot = -1  # row whose prefill finished THIS tick
-            if self.chunked and (pre := sched.prefilling()):
-                req = pre[0]
-                key, sub = jax.random.split(key)
-                caches, tok, valid = self._prefill_chunk(req, sched, caches,
-                                                         sub, gen)
-                did_chunk = True
-                prefill_chunks += 1
-                prefill_tokens += valid
-                prefill_write_bytes += (valid * (bpt1 if req.tier else bpt0)
-                                        * self._n_cache_layers)
-                interconnect += valid * concat_bpt + gather_bps
-                if tok is not None:
-                    # the final chunk runs during THIS tick: its first token
-                    # is available at the tick's end (step + 1), and the row
-                    # joins the decode batch from the NEXT tick
-                    emit_token(req, tok, step + 1)
-                    if req.state == "running":
-                        fresh_slot = req.slot
-
-            # 4) growth: map a page for every running row's next write.
-            #    Out of pages: a dense grower first escalates itself to the
-            #    CPQ arena (frees its dense pages), else the youngest
-            #    same-arena request is preempted (recompute)
-            for req in sorted(sched.running(), key=lambda r: r.admitted_step):
-                if req.state != "running":
-                    continue
-                while not sched.ensure_writable(req):
-                    if req.length // self.serving.page_size >= \
-                            self.serving.max_blocks_per_slot:
-                        finish(req, "length_cap")
-                        break
-                    if self.tiered and req.tier == 0 and sched.cpq_alloc.can_alloc(
-                            pgc.pages_needed(req.length + 1,
-                                             self.serving.page_size)):
-                        slot, length = req.slot, req.length
-                        dense_row, cpq_row = sched.apply_escalation(req)
-                        caches = self._escalate(caches, jnp.asarray(dense_row),
-                                                jnp.asarray(cpq_row),
-                                                jnp.asarray(slot, jnp.int32),
-                                                jnp.asarray(length, jnp.int32))
-                        continue
-                    victim = sched.preemption_victim(exclude=req)
-                    if victim is None:
-                        finish(req, "oom")
-                        break
-                    sched.preempt(victim)
-
-            active = sched.active_mask()
-            if fresh_slot >= 0:
-                active[fresh_slot] = False
-            if not active.any():
-                if did_chunk:
-                    step += 1       # prefill-only tick still costs a tick
-                    continue
-                if not sched.occupied():
-                    if sched.queue and sched.queue[0].arrival <= step:
-                        # empty machine and still unadmissible => never fits
-                        req = sched.queue.popleft()
-                        req.state, req.done_step = "done", step
-                        req.finish_reason = "unschedulable"
-                        results[req.rid] = result_of(req)
-                        continue
-                    # idle: jump the clock to the next arrival
-                    if sched.queue:
-                        step = max(step + 1, int(np.ceil(sched.queue[0].arrival)))
+        # 4) growth: map a page for every running row's next write.
+        #    Out of pages: a dense grower first escalates itself to the
+        #    CPQ arena (frees its dense pages), else the policy's victim
+        #    (default: youngest same-arena) is preempted (recompute)
+        for req in sorted(sched.running(), key=lambda r: r.admitted_step):
+            if req.state != "running":
                 continue
-
-            # 5) one jitted decode step over per-row positions (rows still
-            #    prefilling — and a row whose final chunk landed this very
-            #    tick — are inactive: their writes hit the null page)
-            rows = self._row_state(sched, active)
-            logits, caches = self._decode(self.params, jnp.asarray(last_tok[:, None]),
-                                          rows, caches)
-            key, sub = jax.random.split(key)
-            toks = np.asarray(sample_tokens(logits, sub, gen))
-            decode_steps += 1
-            live_steps += int(active.sum())
-            tier_arr = sched.tiers
-            traffic += float(sum(
-                (sched.lengths[s] + 1.0) * (bpt1 if tier_arr[s] else bpt0)
-                for s in range(B) if active[s])) * self._n_cache_layers
-            interconnect += int(active.sum()) * concat_bpt + gather_bps
-            util = sched.dense_alloc.utilization
-            util_peak = max(util_peak, util)
-            util_sum += util
-            util_n += 1
-            step += 1
-
-            for slot in range(B):
-                if not active[slot]:
+            while not sched.ensure_writable(req):
+                if req.length // self.serving.page_size >= \
+                        self.serving.max_blocks_per_slot:
+                    self._finish(st, req, "length_cap")
+                    break
+                if self.tiered and req.tier == 0 and sched.cpq_alloc.can_alloc(
+                        pgc.pages_needed(req.length + 1,
+                                         self.serving.page_size)):
+                    slot, length = req.slot, req.length
+                    dense_row, cpq_row = sched.apply_escalation(req)
+                    st.caches = self._escalate(st.caches,
+                                               jnp.asarray(dense_row),
+                                               jnp.asarray(cpq_row),
+                                               jnp.asarray(slot, jnp.int32),
+                                               jnp.asarray(length, jnp.int32))
                     continue
-                emit_token(sched.slots[slot], int(toks[slot]), step, grow=True)
+                victim = sched.preemption_victim(exclude=req)
+                if victim is None:
+                    self._finish(st, req, "oom")
+                    break
+                vslot = victim.slot
+                sched.preempt(victim)
+                self._clear_row_sampling(st, vslot)
 
-        wall = time.time() - t0
-        total_bytes = pgc.arena_bytes(caches)
-        device_bytes = self._per_device_arena_bytes(caches, total_bytes)
-        stats = {
+        active = sched.active_mask()
+        if fresh_slot >= 0:
+            active[fresh_slot] = False
+        if not active.any():
+            if did_chunk:
+                st.step += 1     # prefill-only tick still costs a tick
+                return st.step_outputs
+            if not sched.occupied():
+                # a slot may have been vacated AFTER this tick's admission
+                # phase (growth-cap retirement, de-escalation requeue): if
+                # the policy can place someone NOW, just end the tick — the
+                # next tick's admission phase admits them normally
+                if sched.queue and sched.policy.select_admission(
+                        sched, st.step) is not None:
+                    return st.step_outputs
+                cands = sched.policy.admission_order(sched, st.step)
+                if cands and cands[0].arrival <= st.step:
+                    # empty machine (every page free) and the policy's pick
+                    # STILL does not fit => it can never fit
+                    req = cands[0]
+                    sched.queue.remove(req)
+                    req.state, req.done_step = "done", st.step
+                    req.finish_reason = "unschedulable"
+                    st.results[req.rid] = self._result_of(req)
+                    return st.step_outputs
+                # idle: jump the clock to the arrival that unblocks
+                # admission — the policy's blocked pick if it has one
+                # (a no-bypass FIFO head gates everyone behind it), else
+                # the earliest arrival in the queue
+                if sched.queue:
+                    nxt = (cands[0].arrival if cands
+                           else min(r.arrival for r in sched.queue))
+                    st.step = max(st.step + 1, int(np.ceil(nxt)))
+            return st.step_outputs
+
+        # 5) one jitted decode step over per-row positions (rows still
+        #    prefilling — and a row whose final chunk landed this very
+        #    tick — are inactive: their writes hit the null page), then
+        #    ONE jitted per-row sampling call for the whole mixed batch
+        rows = self._row_state(sched, active)
+        logits, st.caches = self._decode(self.params,
+                                         jnp.asarray(st.last_tok[:, None]),
+                                         rows, st.caches)
+        toks = self._sample_active(st, logits)
+        st.decode_steps += 1
+        st.live_steps += int(active.sum())
+        tier_arr = sched.tiers
+        st.traffic += float(sum(
+            (sched.lengths[s] + 1.0) * (st.bpt1 if tier_arr[s] else st.bpt0)
+            for s in range(B) if active[s])) * self._n_cache_layers
+        st.interconnect += int(active.sum()) * st.concat_bpt + st.gather_bps
+        util = sched.dense_alloc.utilization
+        st.util_peak = max(st.util_peak, util)
+        st.util_sum += util
+        st.util_n += 1
+        st.trace_active.append(int(active.sum()))
+        st.trace_util.append(util)
+        st.step += 1
+
+        for slot in range(B):
+            if not active[slot]:
+                continue
+            self._emit_token(st, sched.slots[slot], int(toks[slot]), st.step,
+                             grow=True)
+        return st.step_outputs
+
+    def stats(self) -> dict:
+        """Session counters in the same shape ``serve`` has always returned
+        (throughput, latency inputs, traffic accounting, allocator surface),
+        plus the policy name and the per-tick utilization traces."""
+        st = self._ensure_state()
+        sched = st.sched
+        B = self.serving.num_slots
+        wall = time.time() - st.t0
+        total_bytes = pgc.arena_bytes(st.caches)
+        device_bytes = self._per_device_arena_bytes(st.caches, total_bytes)
+        return {
             "cache_mode": self.rt.mode,
             "tiered": self.tiered,
             "chunked_prefill": self.chunked,
+            "policy": sched.policy.name,
             "model_shards": self.model_shards,
             "arena_bytes_total": total_bytes,
             "arena_bytes_per_device": device_bytes,
-            "interconnect_bytes": interconnect,
-            "interconnect_bytes_per_token": interconnect / max(generated, 1),
-            "decode_steps": decode_steps,
-            "prefill_chunks": prefill_chunks,
-            "prefill_tokens": prefill_tokens,
-            "generated_tokens": generated,
-            "tokens_per_step": generated / max(decode_steps, 1),
-            "slot_utilization": live_steps / max(decode_steps * B, 1),
-            "arena_utilization_mean": util_sum / max(util_n, 1),
-            "arena_utilization_peak": util_peak,
-            "decode_traffic_bytes": traffic,
-            "prefill_write_bytes": prefill_write_bytes,
-            "bytes_per_token_layer": bpt0,
+            "interconnect_bytes": st.interconnect,
+            "interconnect_bytes_per_token": st.interconnect / max(st.generated, 1),
+            "decode_steps": st.decode_steps,
+            "prefill_chunks": st.prefill_chunks,
+            "prefill_tokens": st.prefill_tokens,
+            "generated_tokens": st.generated,
+            "tokens_per_step": st.generated / max(st.decode_steps, 1),
+            "slot_utilization": st.live_steps / max(st.decode_steps * B, 1),
+            "arena_utilization_mean": st.util_sum / max(st.util_n, 1),
+            "arena_utilization_peak": st.util_peak,
+            # per-decode-tick idle-vs-active series (live rows / arena fill):
+            # bench_serving folds these into bench_e2e_energy's device model
+            "trace_active_rows": np.asarray(st.trace_active, np.int32),
+            "trace_arena_util": np.asarray(st.trace_util, np.float64),
+            "decode_traffic_bytes": st.traffic,
+            "prefill_write_bytes": st.prefill_write_bytes,
+            "bytes_per_token_layer": st.bpt0,
             "wall_time_s": wall,
-            "tokens_per_s": generated / max(wall, 1e-9),
+            "tokens_per_s": st.generated / max(wall, 1e-9),
             # invariant: every page freed once all requests retired
             "dense_pages_leaked": sched.dense_alloc.num_used,
             "cpq_pages_leaked": sched.cpq_alloc.num_used if sched.cpq_alloc else 0,
@@ -592,7 +902,22 @@ class ContinuousServeEngine:
             # private dense_alloc/cpq_alloc state
             **sched.arena_stats(),
         }
-        return results, stats
+
+    def serve(self, requests: list[Union[Request, ServeRequest]],
+              gen: GenerationConfig = GenerationConfig()):
+        """Batch-shaped wrapper over the request-centric API (kept for
+        backward compatibility): resets the session, submits every request
+        in arrival order, and drains with ``step()``. Returns
+        (results, stats) exactly as before; ``ServeRequest`` specs are
+        accepted alongside scheduler ``Request`` records, and greedy FIFO
+        serving is token-identical to the pre-request-API engine."""
+        self.reset(gen)
+        st = self._st
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self.add_request(r)
+        while st.sched.has_work():
+            self.step()
+        return dict(st.results), self.stats()
 
     def _latent_gather_bytes_per_step(self, caches) -> float:
         """Interconnect bytes ONE model invocation moves re-assembling the

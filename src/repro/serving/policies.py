@@ -1,0 +1,283 @@
+"""Pluggable scheduler policies: WHO gets admitted, preempted, escalated.
+
+``serving/scheduler.py`` keeps the mechanisms — page allocation, slot
+bookkeeping, state transitions — and delegates every *decision* to a
+``SchedulerPolicy``:
+
+  select_admission        which queued request takes the vacated slot, and
+                          into which arena tier (0 = dense, 1 = T2 CPQ)
+  preemption_victim       which slot holder is recomputed away when a grower
+                          runs out of pages
+  escalation_candidate    which running dense row is re-compressed into the
+                          CPQ arena under critical memory pressure
+  deescalation_candidate  which escalated (T2) row is restored to the dense
+                          tier once pressure clears (chunked re-admission)
+
+Policies see the scheduler read-only (queue, slots, allocators, watermark
+fractions) and return Request objects; they never mutate scheduler state.
+Three implementations:
+
+  ``FifoPolicy``      today's behavior, decision-identical: head-of-queue
+                      admission (no bypass), watermark tier assignment,
+                      youngest-same-arena preemption, longest-dense
+                      escalation, no de-escalation (unless opted in).
+  ``PriorityPolicy``  strict ``SloClass.priority`` classes with aging: a
+                      queued request gains one effective priority level per
+                      ``aging_ticks`` waited, so starved low classes
+                      eventually outrank fresh high ones. Preemption and
+                      escalation pick low-priority victims first.
+  ``SloAwarePolicy``  earliest-deadline-first admission by projected TTFT
+                      slack (wait so far + the prompt's remaining chunk
+                      ticks against ``SloClass.ttft_target``), low-priority
+                      preemption/escalation victims, and de-escalation ON
+                      by default: when the dense free-page fraction recovers
+                      above ``ServingCfg.high_watermark``, the
+                      highest-priority escalated row is re-admitted dense.
+
+De-escalation (the ROADMAP's "T2 -> dense when pressure clears") is a
+recompute: CPQ codes are lossy, so the dense K/V is rebuilt by chunked
+re-admission of the request's ``prompt + generated`` context — the same
+exact-replay path preemption uses. The candidate hook requires hysteresis
+headroom (``free_frac > high_watermark >= low_watermark``) AND a full dense
+fit for the row's context before volunteering it, so a de-escalated row is
+never immediately re-escalated by the same watermark that moved it out.
+"""
+from __future__ import annotations
+
+import math
+from typing import TYPE_CHECKING, Optional, Protocol, runtime_checkable
+
+from repro.serving.paged_cache import pages_needed
+from repro.serving.request import STANDARD, SloClass
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.serving.scheduler import Request, Scheduler
+
+
+def slo_of(req: "Request") -> SloClass:
+    """A request's service class (STANDARD when unset — legacy Requests)."""
+    return req.slo if req.slo is not None else STANDARD
+
+
+@runtime_checkable
+class SchedulerPolicy(Protocol):
+    """Decision interface consulted by ``Scheduler``. Implementations must
+    be deterministic functions of scheduler state (serving is replayable)."""
+
+    name: str
+
+    def admission_order(self, sched: "Scheduler", now: float
+                        ) -> list["Request"]:
+        """Admission preference order over queued requests (the engine also
+        reads this to identify the blocked candidate when an empty machine
+        cannot place anyone — the unschedulable-drop path). May contain
+        not-yet-arrived requests (e.g. a FIFO head); ``select_admission``
+        filters those."""
+        ...
+
+    def select_admission(self, sched: "Scheduler", now: float
+                         ) -> Optional[tuple["Request", int]]:
+        """(request to admit, tier) — or None to leave the slot empty this
+        tick. The request must be in ``sched.queue`` with
+        ``arrival <= now``, and its context's pages must fit the tier's
+        arena (the scheduler allocates exactly that)."""
+        ...
+
+    def preemption_victim(self, sched: "Scheduler", exclude: "Request"
+                          ) -> Optional["Request"]:
+        ...
+
+    def escalation_candidate(self, sched: "Scheduler") -> Optional["Request"]:
+        ...
+
+    def deescalation_candidate(self, sched: "Scheduler") -> Optional["Request"]:
+        ...
+
+
+class FifoPolicy:
+    """The pre-policy scheduler's decisions, verbatim. ``deescalate=True``
+    opts the fifo order into the recovery hook (off by default so the
+    default engine is decision-identical to before)."""
+
+    name = "fifo"
+
+    def __init__(self, deescalate: bool = False):
+        self.deescalate = deescalate
+
+    # -- admission --------------------------------------------------------
+    def _arrived(self, sched: "Scheduler", now: float) -> list["Request"]:
+        return [r for r in sched.queue if r.arrival <= now]
+
+    def admission_order(self, sched: "Scheduler", now: float
+                     ) -> list["Request"]:
+        """Admission preference order over arrived requests. FIFO considers
+        only the head: no bypass, so per-request latency stays fair."""
+        return list(sched.queue)[:1] if self._arrived(sched, now) else []
+
+    def _fit_tier(self, sched: "Scheduler", req: "Request"
+                  ) -> Optional[int]:
+        """Watermark tier assignment + arena fit (the shared mechanism all
+        three policies use): below the low watermark new admissions go
+        compressed; a full dense arena falls back to the CPQ arena.
+        EXCEPTION: a de-escalation recovery replay (``req.recovering``) is
+        pinned to the dense tier — if a racing admission consumed the dense
+        headroom since the row was volunteered, it WAITS rather than paying
+        a full-context recompute just to land compressed again."""
+        tier = 0
+        if (sched.tiered and not req.recovering
+                and sched.free_frac() < sched.cfg.low_watermark):
+            tier = 1
+        need = pages_needed(len(req.context), sched.cfg.page_size)
+        if not sched._arena(tier).can_alloc(need):
+            if (tier == 0 and sched.tiered and not req.recovering
+                    and sched.cpq_alloc.can_alloc(need)):
+                tier = 1
+            else:
+                return None
+        return tier
+
+    def select_admission(self, sched, now):
+        for req in self.admission_order(sched, now):
+            if req.arrival > now:
+                continue
+            tier = self._fit_tier(sched, req)
+            if tier is None:
+                return None  # no bypass: the chosen request blocks the slot
+            return req, tier
+        return None
+
+    # -- preemption -------------------------------------------------------
+    def preemption_victim(self, sched, exclude):
+        """Youngest slot holder in the SAME arena as the blocked request
+        (evicting across arenas cannot unblock the grower)."""
+        cands = [r for r in sched.occupied()
+                 if r is not exclude and r.tier == exclude.tier]
+        return max(cands, key=lambda r: r.admitted_step, default=None)
+
+    # -- escalation -------------------------------------------------------
+    def escalation_candidate(self, sched):
+        """Under critical pressure: the longest running dense request whose
+        compressed footprint fits the CPQ arena."""
+        if sched.free_frac() >= sched.cfg.critical_watermark:
+            return None
+        cands = [r for r in sched.running() if r.tier == 0]
+        for r in sorted(cands, key=lambda r: -r.length):
+            if sched.cpq_alloc.can_alloc(
+                    pages_needed(r.length + 1, sched.cfg.page_size)):
+                return r
+        return None
+
+    # -- de-escalation ----------------------------------------------------
+    def _deesc_order(self, cands: list["Request"]) -> list["Request"]:
+        """Recovery preference among escalated rows: shortest context first
+        (cheapest recompute)."""
+        return sorted(cands, key=lambda r: r.length)
+
+    def deescalation_candidate(self, sched):
+        if not self.deescalate:
+            return None
+        if sched.free_frac() <= sched.cfg.high_watermark:
+            return None  # hysteresis: recover only with real headroom
+        cands = [r for r in sched.running() if r.tier == 1]
+        for r in self._deesc_order(cands):
+            # the full context must fit dense NOW (re-admission is a
+            # recompute; volunteering a row that cannot land thrashes)
+            need = pages_needed(len(r.context) + 1, sched.cfg.page_size)
+            if sched.dense_alloc.can_alloc(need):
+                return r
+        return None
+
+
+class PriorityPolicy(FifoPolicy):
+    """Strict priority classes with aging. Admission picks the highest
+    effective priority — ``priority + waited // aging_ticks`` — breaking
+    ties by arrival order, so high classes jump the queue but starved low
+    classes climb one level per ``aging_ticks`` waited. Preemption and
+    escalation spend low-priority rows first."""
+
+    name = "priority"
+
+    def __init__(self, aging_ticks: int = 64, deescalate: bool = False):
+        super().__init__(deescalate=deescalate)
+        assert aging_ticks >= 1
+        self.aging_ticks = aging_ticks
+
+    def effective_priority(self, req: "Request", now: float) -> float:
+        return slo_of(req).priority + (max(0.0, now - req.arrival)
+                                       // self.aging_ticks)
+
+    def admission_order(self, sched, now):
+        arrived = self._arrived(sched, now)
+        order = {id(r): i for i, r in enumerate(sched.queue)}
+        return sorted(arrived,
+                      key=lambda r: (-self.effective_priority(r, now),
+                                     r.arrival, order[id(r)]))[:1]
+
+    def preemption_victim(self, sched, exclude):
+        cands = [r for r in sched.occupied()
+                 if r is not exclude and r.tier == exclude.tier]
+        return max(cands,
+                   key=lambda r: (-slo_of(r).priority, r.admitted_step),
+                   default=None)
+
+    def escalation_candidate(self, sched):
+        if sched.free_frac() >= sched.cfg.critical_watermark:
+            return None
+        cands = [r for r in sched.running() if r.tier == 0]
+        for r in sorted(cands, key=lambda r: (slo_of(r).priority, -r.length)):
+            if sched.cpq_alloc.can_alloc(
+                    pages_needed(r.length + 1, sched.cfg.page_size)):
+                return r
+        return None
+
+    def _deesc_order(self, cands):
+        """Restore full-quality (dense) attention to important rows first."""
+        return sorted(cands, key=lambda r: (-slo_of(r).priority, r.length))
+
+
+class SloAwarePolicy(PriorityPolicy):
+    """Earliest-deadline-first admission by projected TTFT slack.
+
+    For each arrived request: ``projected_ttft = waited + remaining prefill
+    chunk ticks``; slack = ``ttft_target - projected_ttft``. The request
+    with the LEAST slack admits first (already-blown deadlines are the most
+    negative, hence most urgent); infinite targets sort last, ordered by
+    priority then arrival. Victim selection spends low-priority rows first
+    (inherited), and de-escalation is ON by default — the paper's
+    memory-pressure tiering run in both directions."""
+
+    name = "slo"
+
+    def __init__(self, aging_ticks: int = 64, deescalate: bool = True):
+        super().__init__(aging_ticks=aging_ticks, deescalate=deescalate)
+
+    def projected_ttft(self, sched: "Scheduler", req: "Request",
+                       now: float) -> float:
+        quantum = sched.cfg.prefill_chunk or sched.cfg.prefill_bucket
+        chunks = -(-len(req.context) // quantum)
+        return (now - req.arrival) + chunks
+
+    def admission_order(self, sched, now):
+        arrived = self._arrived(sched, now)
+        order = {id(r): i for i, r in enumerate(sched.queue)}
+
+        def key(r):
+            slo = slo_of(r)
+            slack = slo.ttft_target - self.projected_ttft(sched, r, now)
+            return (math.isinf(slack), slack, -slo.priority, r.arrival,
+                    order[id(r)])
+
+        return sorted(arrived, key=key)[:1]
+
+
+_POLICIES = {"fifo": FifoPolicy, "priority": PriorityPolicy,
+             "slo": SloAwarePolicy}
+
+
+def make_policy(name: str, **kw) -> SchedulerPolicy:
+    """Policy factory for CLI / config strings: fifo | priority | slo."""
+    try:
+        return _POLICIES[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown scheduler policy {name!r}; "
+                         f"choose from {sorted(_POLICIES)}") from None

@@ -8,14 +8,21 @@ Request lifecycle:
 
     queued --admit--> prefilling --finish_prefill--> running --retire--> done
                 \\          |                           | preempt (out of
-                 \\         | preempt                   | pages: recompute-
-                  <---------+---------------------------+ style, vLLM)
+                 \\         | preempt /                 | pages: recompute-
+                  <---------+--- deescalate ------------+ style, vLLM)
 
 ``prefilling`` is the chunked-admission window: the slot and its pages are
 owned, but the prompt is still streaming into the arena chunk by chunk
 (at most one chunk per engine tick, interleaved with the decode step) and
 the row does not decode yet. The one-shot path (prefill_chunk == 0)
 passes through it within a single engine tick.
+
+Decision/mechanism split: WHICH request admits (and into which tier), which
+slot holder a page-starved grower evicts, which dense row escalates under
+critical pressure, and which T2 row de-escalates when pressure clears are
+all delegated to a ``SchedulerPolicy`` (serving/policies.py; default
+``FifoPolicy`` is decision-identical to the pre-policy scheduler). This
+module keeps the mechanisms those decisions drive.
 
 Watermark policy (free-page fraction of the DENSE base arena):
 
@@ -27,6 +34,12 @@ Watermark policy (free-page fraction of the DENSE base arena):
                                    re-compressed into the CPQ arena and the
                                    dense pages freed (engine runs the jitted
                                    ``model.escalate_slot``).
+  * ``free > high_watermark``      (policies with de-escalation enabled)
+                                   an escalated row is restored to the dense
+                                   tier by chunked re-admission — CPQ codes
+                                   are lossy, so the dense K/V is rebuilt by
+                                   the same exact context replay preemption
+                                   uses.
 
 Only dense -> T2 is escalatable post-hoc: T1 (decomposed) needs the
 pre-projection operand X, which a dense cache never stored; T2 compresses
@@ -36,13 +49,14 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.configs.base import ServingCfg
 from repro.serving.paged_cache import (NULL_PAGE, PageAllocator, defrag_plan,
                                        pages_needed)
+from repro.serving.request import SamplingParams, SloClass
 
 
 class SchedulerConfigError(ValueError):
@@ -58,6 +72,11 @@ class Request:
     prompt: np.ndarray                      # (S,) int32
     max_new_tokens: int
     arrival: float = 0.0                    # decode-step time units
+    # -- request-centric API (serving/request.py); None = legacy defaults
+    # derived by the engine from its GenerationConfig on admission --
+    sampling: Optional[SamplingParams] = None
+    slo: Optional[SloClass] = None          # policies read via slo_of()
+    stream: Optional[Callable] = None       # per-token RequestOutput callback
     # -- scheduler-owned state --
     state: str = "queued"                   # queued | prefilling | running | done
     slot: int = -1
@@ -73,6 +92,11 @@ class Request:
     finish_reason: str = ""
     preemptions: int = 0
     escalated: bool = False
+    deescalations: int = 0
+    # set between deescalate() and the re-admission it exists for: the
+    # recovery replay must land DENSE (policies pin its tier; falling back
+    # to T2 would be a full-context recompute for nothing)
+    recovering: bool = False
 
     @property
     def context(self) -> np.ndarray:
@@ -84,11 +108,20 @@ class Request:
     def num_generated(self) -> int:
         return len(self.generated)
 
+    @property
+    def stop_ids(self) -> frozenset:
+        return (frozenset(self.sampling.stop_token_ids)
+                if self.sampling is not None else frozenset())
+
 
 class Scheduler:
-    def __init__(self, serving: ServingCfg, tiered: bool = False):
+    def __init__(self, serving: ServingCfg, tiered: bool = False,
+                 policy=None):
+        from repro.serving.policies import FifoPolicy
+
         self.cfg = serving
         self.tiered = tiered
+        self.policy = policy if policy is not None else FifoPolicy()
         if serving.max_len < 2:
             raise SchedulerConfigError("max_len < 2")
         self.dense_alloc = PageAllocator(serving.num_pages)
@@ -101,7 +134,8 @@ class Scheduler:
         self.lengths = np.zeros((S,), np.int32)
         self.tiers = np.zeros((S,), np.int32)
         self.stats = {"admitted": 0, "retired": 0, "preemptions": 0,
-                      "escalations": 0, "peak_dense_pages": 0, "defrags": 0}
+                      "escalations": 0, "deescalations": 0,
+                      "peak_dense_pages": 0, "defrags": 0}
 
     # ------------------------------------------------------------- queries
 
@@ -184,29 +218,24 @@ class Scheduler:
         self.queue.append(req)
 
     def admit_next(self, now: float, step: int) -> Optional[Request]:
-        """Pop the next arrived request into a vacated slot if its prompt's
-        pages fit its tier arena. FIFO: the head must be admissible (no
-        head-of-line bypass — keeps per-request latency fair)."""
-        if not self.queue or self.queue[0].arrival > now:
+        """Admit the policy's pick into a vacated slot. The policy chooses
+        WHICH arrived request and WHICH tier (``select_admission``; the
+        default FifoPolicy requires the queue head to be admissible — no
+        head-of-line bypass); this method performs the mechanics."""
+        if not self.queue:
             return None
         try:
             slot = self.slots.index(None)
         except ValueError:
             return None
-        req = self.queue[0]
-        tier = 0
-        if self.tiered and self.free_frac() < self.cfg.low_watermark:
-            tier = 1  # memory pressure: admit compressed
+        sel = self.policy.select_admission(self, now)
+        if sel is None:
+            return None
+        req, tier = sel
         arena = self._arena(tier)
         need = pages_needed(len(req.context), self.cfg.page_size)
-        if not arena.can_alloc(need):
-            if tier == 0 and self.tiered:
-                tier, arena = 1, self.cpq_alloc  # dense full; try compressed
-                if not arena.can_alloc(need):
-                    return None
-            else:
-                return None
-        self.queue.popleft()
+        self.queue.remove(req)
+        req.recovering = False
         req.pages = arena.alloc(need)
         req.state, req.slot, req.tier = "prefilling", slot, tier
         req.prefill_target = len(req.context)
@@ -290,26 +319,45 @@ class Scheduler:
         self.queue.appendleft(req)
 
     def preemption_victim(self, exclude: Request) -> Optional[Request]:
-        """Youngest slot holder (decoding or mid-prefill — both own pages)
-        whose pages live in the SAME arena the blocked request allocates from
-        — evicting a tier-1 victim cannot unblock a dense-tier grower (and
-        vice versa)."""
-        cands = [r for r in self.occupied()
-                 if r is not exclude and r.tier == exclude.tier]
-        return max(cands, key=lambda r: r.admitted_step, default=None)
+        """Policy-chosen eviction victim among slot holders (decoding or
+        mid-prefill — both own pages) in the SAME arena the blocked request
+        allocates from. Default (fifo): the youngest."""
+        return self.policy.preemption_victim(self, exclude)
 
-    # ---------------------------------------------------------- escalation
+    # ------------------------------------------------- escalation / recovery
 
     def escalation_candidate(self) -> Optional[Request]:
-        """Under critical pressure: the longest running dense request whose
-        compressed footprint fits the CPQ arena."""
-        if not self.tiered or self.free_frac() >= self.cfg.critical_watermark:
+        """Under critical pressure: the policy's pick among running dense
+        requests whose compressed footprint fits the CPQ arena. Default
+        (fifo): the longest."""
+        if not self.tiered:
             return None
-        cands = [r for r in self.running() if r.tier == 0]
-        for r in sorted(cands, key=lambda r: -r.length):
-            if self.cpq_alloc.can_alloc(pages_needed(r.length + 1, self.cfg.page_size)):
-                return r
-        return None
+        return self.policy.escalation_candidate(self)
+
+    def deescalation_candidate(self) -> Optional[Request]:
+        """When dense pressure clears (free fraction above the HIGH
+        watermark): the policy's pick among escalated (T2) running rows
+        whose full context fits the dense arena, or None (default fifo:
+        de-escalation is opt-in)."""
+        if not self.tiered:
+            return None
+        return self.policy.deescalation_candidate(self)
+
+    def deescalate(self, req: Request) -> None:
+        """T2 -> dense recovery via chunked re-admission: CPQ codes are
+        lossy, so the dense K/V is rebuilt by replaying the request's
+        ``prompt + generated`` context through the normal (chunked)
+        admission path. Mechanically a preemption — free everything, requeue
+        at the FRONT — tracked separately in the stats; the re-admission
+        lands dense because the policy only volunteers rows when the free
+        fraction sits above ``high_watermark`` (hysteresis)."""
+        assert req.tier == 1 and req.slot >= 0, "de-escalating a dense row"
+        self._release(req)
+        req.state, req.tier, req.length = "queued", 0, 0
+        req.deescalations += 1
+        req.recovering = True
+        self.stats["deescalations"] += 1
+        self.queue.appendleft(req)
 
     def apply_escalation(self, req: Request) -> tuple[np.ndarray, np.ndarray]:
         """Move ``req``'s page ownership dense -> CPQ arena. Returns

@@ -34,6 +34,15 @@ single-device path is bit-identical to before. Numerics under a mesh: every
 head's math is computed once on exactly one device from the same operands,
 so sharded-vs-single-device greedy decode is token-exact at f32
 (tests/test_serving_sharded.py).
+
+Per-request sampling under a mesh: the vectorized per-row sampling
+parameters (temperature / top-k / top-p / seed / stream-index arrays) cross
+the mesh REPLICATED — the sampler consumes the already-concatenated (B, V)
+logits after the shard_map'd attention, so every device draws the identical
+token from identical operands (``replicate_on_mesh``). Sampled decode is
+therefore mesh-invariant exactly like greedy decode: the categorical draw is
+a deterministic function of (logits, seed, stream index), none of which
+shard.
 """
 from __future__ import annotations
 
@@ -66,6 +75,18 @@ def _shard_map(f, mesh, in_specs, out_specs):
 
 
 MODEL_AXIS = "model"
+
+
+def replicate_on_mesh(mesh, tree):
+    """Pin a host pytree (per-row sampling parameter arrays, scheduler-side
+    scalars) onto every device of the serving mesh REPLICATED, so the jitted
+    per-row sampler sees one committed layout instead of letting GSPMD infer
+    placement per call site. Identity when ``mesh`` is None."""
+    if mesh is None:
+        return tree
+    from jax.sharding import NamedSharding
+
+    return jax.device_put(tree, NamedSharding(mesh, P()))
 
 # intent specs for the per-call attention operands (fitted to shapes; the
 # kv/query-head axis shards, everything else is replicated)

@@ -1,0 +1,400 @@
+"""Scheduler-policy suite: admission ordering (priority / aging / TTFT-slack
+EDF), victim selection, the de-escalation (T2 -> dense recovery) regression,
+engine-level policy behaviour on contended traces, and the hypothesis
+property that ANY interleaving of policy decisions (admit / preempt /
+escalate / de-escalate / retire) preserves the allocator invariants — no
+leaked and no double-owned pages, in either arena."""
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import hypothesis, st  # optional dep; see pyproject
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.models import model as M
+from repro.serving.engine import ContinuousServeEngine, GenerationConfig
+from repro.serving.paged_cache import NULL_PAGE, pages_needed
+from repro.serving.policies import (FifoPolicy, PriorityPolicy, SloAwarePolicy,
+                                    make_policy)
+from repro.serving.request import SamplingParams, ServeRequest, SloClass
+from repro.serving.scheduler import Request, Scheduler
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _req(rid, plen=4, max_new=4, arrival=0.0, prio=None, ttft=None):
+    slo = None
+    if prio is not None or ttft is not None:
+        slo = SloClass(f"c{prio}", priority=prio or 0,
+                       ttft_target=float("inf") if ttft is None else ttft)
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32) % 7,
+                   max_new_tokens=max_new, arrival=arrival, slo=slo)
+
+
+SERVING = ServingCfg(num_slots=2, page_size=4, num_pages=17,
+                     max_blocks_per_slot=4)
+
+
+# -------------------------------------------------------- admission ordering
+
+
+def test_fifo_policy_is_head_only():
+    """FIFO never bypasses the head: an arrived later request does not admit
+    while the (unarrived or unfitting) head blocks."""
+    sched = Scheduler(SERVING, policy=FifoPolicy())
+    a, b = _req(0, arrival=5.0), _req(1, arrival=0.0)
+    sched.submit(a)
+    sched.submit(b)
+    assert sched.admit_next(now=0, step=0) is None      # head not arrived
+    got = sched.admit_next(now=5, step=5)
+    assert got is a                                      # head first
+
+
+def test_priority_policy_jumps_queue_and_ages():
+    pol = PriorityPolicy(aging_ticks=10)
+    sched = Scheduler(SERVING, policy=pol)
+    lo, hi = _req(0, prio=0), _req(1, prio=2)
+    sched.submit(lo)
+    sched.submit(hi)
+    assert sched.admit_next(now=0, step=0) is hi         # class order
+    # aging: a level-0 request that waited 2*aging_ticks outranks a fresh
+    # level-1 arrival
+    sched2 = Scheduler(SERVING, policy=pol)
+    old = _req(0, prio=0, arrival=0.0)
+    fresh = _req(1, prio=1, arrival=20.0)
+    sched2.submit(old)
+    sched2.submit(fresh)
+    assert pol.effective_priority(old, 20.0) == 2.0
+    assert sched2.admit_next(now=20, step=20) is old
+
+
+def test_slo_policy_admits_least_slack_first():
+    pol = SloAwarePolicy()
+    serving = ServingCfg(num_slots=3, page_size=4, num_pages=17,
+                         max_blocks_per_slot=4)
+    sched = Scheduler(serving, policy=pol)
+    patient = _req(0, plen=4, ttft=100.0)
+    urgent = _req(1, plen=4, ttft=3.0)
+    nodeadline = _req(2, plen=4, ttft=float("inf"))      # inf target: last
+    for r in (patient, urgent, nodeadline):
+        sched.submit(r)
+    assert sched.admit_next(now=0, step=0) is urgent
+    assert sched.admit_next(now=0, step=0) is patient
+    assert sched.admit_next(now=0, step=0) is nodeadline
+
+
+def test_priority_preemption_and_escalation_pick_low_class():
+    pol = PriorityPolicy()
+    serving = ServingCfg(num_slots=3, page_size=4, num_pages=17,
+                         max_blocks_per_slot=4)
+    sched = Scheduler(serving, policy=pol)
+    reqs = [_req(0, prio=2), _req(1, prio=0), _req(2, prio=1)]
+    for r in reqs:
+        sched.submit(r)
+    for s in range(3):
+        sched.admit_next(now=s, step=s)
+    # victim: lowest class, NOT the newest (rid 2 admitted last)
+    assert sched.preemption_victim(exclude=reqs[0]) is reqs[1]
+
+
+# --------------------------------------------------- engine-level behaviour
+
+
+def test_policy_string_and_object_select_the_same_policy(model):
+    cfg, params = model
+    eng = ContinuousServeEngine(cfg, params, serving=ServingCfg(policy="slo"))
+    assert eng.make_policy().name == "slo"
+    eng = ContinuousServeEngine(cfg, params, policy=PriorityPolicy())
+    assert eng.make_policy().name == "priority"
+    with pytest.raises(ValueError):
+        make_policy("round-robin")
+
+
+def test_priority_improves_high_class_ttft(model):
+    """Contended single-slot trace: batch jobs arrive first, an interactive
+    request second — priority admits it decades earlier than FIFO, and the
+    greedy tokens of every request are policy-invariant (scheduling changes
+    WHEN a request runs, never WHAT it generates)."""
+    cfg, params = model
+    serving = ServingCfg(num_slots=1, page_size=4, num_pages=17,
+                         max_blocks_per_slot=4, prefill_bucket=4,
+                         prefill_chunk=4)
+
+    def trace():
+        rng = np.random.default_rng(3)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, 5).astype(np.int32),
+                        max_new_tokens=8,
+                        slo=SloClass("batch", priority=0)) for i in range(3)]
+        reqs.append(Request(
+            rid=9, prompt=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+            max_new_tokens=3, arrival=1.0,
+            slo=SloClass("interactive", priority=2, ttft_target=8.0)))
+        return reqs
+
+    outs = {}
+    for name in ("fifo", "priority"):
+        eng = ContinuousServeEngine(cfg, params, serving=serving, policy=name)
+        res, stats = eng.serve(trace(), GenerationConfig())
+        assert stats["policy"] == name
+        assert stats["dense_pages_leaked"] == 0
+        outs[name] = res
+    f, p = outs["fifo"], outs["priority"]
+    assert (p[9]["first_token_step"] - 1.0) < (f[9]["first_token_step"] - 1.0)
+    for rid in f:
+        np.testing.assert_array_equal(f[rid]["tokens"], p[rid]["tokens"])
+
+
+def test_deescalation_restores_dense_tier(model):
+    """The ROADMAP de-escalation item: once memory pressure clears (free
+    fraction above the high watermark), the policy re-admits an escalated
+    T2 row to the dense tier via chunked re-admission. The recovered
+    request finishes its full budget, both arenas end leak-free, and a
+    replay is bit-identical (recovery is deterministic recompute)."""
+    cfg, params = model
+    serving = ServingCfg(num_slots=3, page_size=4, num_pages=13,
+                         escalated_pages=33, max_blocks_per_slot=8,
+                         prefill_bucket=4, low_watermark=0.5,
+                         critical_watermark=0.25, high_watermark=0.55,
+                         enable_escalation=True)
+    eng = ContinuousServeEngine(cfg, params, serving=serving,
+                                policy=SloAwarePolicy())
+    assert eng.tiered
+
+    def fresh():
+        rng = np.random.default_rng(2)
+        sizes, targets = (8, 10, 6, 7, 9), (6, 16, 6, 6, 6)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, s).astype(np.int32),
+                        max_new_tokens=t)
+                for i, (s, t) in enumerate(zip(sizes, targets))]
+
+    res, stats = eng.serve(fresh(), GenerationConfig(max_new_tokens=16))
+    assert stats["escalations"] >= 1
+    assert stats["deescalations"] >= 1
+    recovered = [i for i in res if res[i]["deescalations"] > 0]
+    assert recovered
+    for i in recovered:
+        # escalated, then recovered, then FINISHED its whole budget dense
+        assert res[i]["escalated"]
+        assert res[i]["finish_reason"] == "max_tokens"
+        assert len(res[i]["tokens"]) == 16
+        t = res[i]["tokens"]
+        assert (t >= 0).all() and (t < cfg.vocab_size).all()
+    assert stats["dense_pages_leaked"] == 0 and stats["cpq_pages_leaked"] == 0
+    res2, stats2 = eng.serve(fresh(), GenerationConfig(max_new_tokens=16))
+    for i in res:
+        np.testing.assert_array_equal(res[i]["tokens"], res2[i]["tokens"])
+    assert stats2["deescalations"] == stats["deescalations"]
+
+
+def test_deescalation_of_sole_occupant_readmits_not_drops(model):
+    """Regression: de-escalating the ONLY occupied slot vacates the machine
+    mid-tick, AFTER the admission phase ran — the end-of-tick
+    empty-machine branch must recognize the requeued row as placeable and
+    let the next tick re-admit it, NOT drop it as 'unschedulable' with a
+    truncated stream (the bug: finish_reason='unschedulable' at 18/20
+    tokens on this exact trace)."""
+    cfg, params = model
+    serving = ServingCfg(num_slots=2, page_size=4, num_pages=9,
+                         escalated_pages=33, max_blocks_per_slot=8,
+                         prefill_bucket=4, prefill_chunk=4,
+                         low_watermark=0.5, critical_watermark=0.25,
+                         high_watermark=0.6, enable_escalation=True)
+    eng = ContinuousServeEngine(cfg, params, serving=serving,
+                                policy=SloAwarePolicy())
+    rng = np.random.default_rng(4)
+    reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=4),   # retires early
+            Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=20)]  # recovers alone
+    res, stats = eng.serve(reqs, GenerationConfig(max_new_tokens=20))
+    assert stats["deescalations"] >= 1
+    assert res[1]["deescalations"] >= 1
+    assert res[1]["finish_reason"] == "max_tokens"
+    assert len(res[1]["tokens"]) == 20          # nothing truncated
+    assert stats["dense_pages_leaked"] == 0 and stats["cpq_pages_leaked"] == 0
+
+
+def test_fifo_deescalation_is_opt_in():
+    """high_watermark alone never triggers recovery under the default
+    policy; FifoPolicy(deescalate=True) opts in."""
+    serving = ServingCfg(num_slots=2, page_size=4, num_pages=9,
+                        escalated_pages=17, max_blocks_per_slot=4,
+                        low_watermark=0.5, critical_watermark=0.25,
+                        high_watermark=0.6, enable_escalation=True)
+    sched = Scheduler(serving, tiered=True, policy=FifoPolicy())
+    r = _req(0, plen=4)
+    sched.submit(r)
+    sched.admit_next(now=0, step=0)
+    sched.finish_prefill(r)
+    dense_row, _ = sched.apply_escalation(r)
+    assert r.tier == 1 and sched.free_frac() > serving.high_watermark
+    assert sched.deescalation_candidate() is None         # default: off
+    sched.policy = FifoPolicy(deescalate=True)
+    assert sched.deescalation_candidate() is r
+    sched.deescalate(r)
+    assert r.state == "queued" and r.tier == 0 and r.deescalations == 1
+    assert sched.cpq_alloc.num_used == 0                  # CPQ pages freed
+    assert sched.stats["deescalations"] == 1
+
+
+def test_add_request_rejects_duplicate_rid(model):
+    """rid keys results and scheduler bookkeeping — a collision must raise
+    instead of silently clobbering another request's record."""
+    from repro.serving.request import SamplingParams, ServeRequest
+    from repro.serving.scheduler import SchedulerConfigError
+
+    cfg, params = model
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.reset()
+    eng.add_request(ServeRequest(prompt=np.arange(4) % 7, rid=5,
+                                 sampling=SamplingParams(max_tokens=2)))
+    with pytest.raises(SchedulerConfigError):
+        eng.add_request(ServeRequest(prompt=np.arange(4) % 7, rid=5,
+                                     sampling=SamplingParams(max_tokens=2)))
+    # auto-assigned rids steer around the taken id
+    rid = eng.add_request(ServeRequest(prompt=np.arange(4) % 7,
+                                       sampling=SamplingParams(max_tokens=2)))
+    assert rid == 6
+
+
+def test_idle_clock_jumps_over_unarrived_fifo_head(model):
+    """An arrived request blocked behind an unarrived no-bypass FIFO head
+    must not degrade the idle fast-forward into one-tick spins: the clock
+    jumps straight to the blocking head's arrival."""
+    from repro.serving.request import SamplingParams, ServeRequest
+
+    cfg, params = model
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.reset()
+    eng.add_request(ServeRequest(prompt=np.arange(4) % 7, rid=0, arrival=500.0,
+                                 sampling=SamplingParams(max_tokens=2)))
+    eng.add_request(ServeRequest(prompt=np.arange(4) % 7, rid=1, arrival=0.0,
+                                 sampling=SamplingParams(max_tokens=2)))
+    for _ in range(4):   # a few idle ticks must reach the head's arrival
+        eng.step()
+        if eng._st.step >= 500:
+            break
+    assert eng._st.step >= 500
+    while eng.has_unfinished():
+        eng.step()
+    res = eng.results()
+    assert len(res[0]["tokens"]) == 2 and len(res[1]["tokens"]) == 2
+
+
+def test_high_watermark_validation():
+    with pytest.raises(AssertionError):
+        ServingCfg(low_watermark=0.6, high_watermark=0.4)
+    with pytest.raises(AssertionError):
+        ServingCfg(policy="lifo")
+
+
+# ------------------------------- allocator invariants under policy decisions
+
+
+def _check_invariants(sched: Scheduler, serving: ServingCfg, tiered: bool):
+    """No leaked, no double-owned pages; block tables mirror ownership."""
+    for tier, alloc in ((0, sched.dense_alloc), (1, sched.cpq_alloc)):
+        if alloc is None:
+            continue
+        owned = [p for r in sched.occupied() if r.tier == tier
+                 for p in r.pages]
+        assert len(set(owned)) == len(owned), "double-owned page"
+        assert NULL_PAGE not in owned
+        assert alloc.num_used == len(owned), "leaked/phantom pages"
+        assert alloc.num_used + alloc.num_free == alloc.num_pages - 1
+    for slot, r in enumerate(sched.slots):
+        for tier, tables in ((0, sched.block_tables),
+                             (1, sched.alt_block_tables)):
+            if tables is None:
+                continue
+            mapped = set(int(p) for p in tables[slot]) - {NULL_PAGE}
+            if r is None or r.tier != tier:
+                assert not mapped, "stale block-table row"
+            else:
+                assert mapped == set(r.pages)
+
+
+@hypothesis.given(seed=st.integers(0, 2 ** 31 - 1),
+                  policy=st.sampled_from(["fifo", "priority", "slo"]),
+                  tiered=st.booleans(),
+                  num_pages=st.integers(4, 17))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_policy_interleaving_preserves_allocator_invariants(
+        seed, policy, tiered, num_pages):
+    """Drive a Scheduler through a random interleaving of the full decision
+    vocabulary — admit / chunk / finish / grow / preempt / escalate /
+    de-escalate / retire, as chosen by a random policy — and assert after
+    every step that no page is leaked or double-owned and every block table
+    mirrors ownership exactly. At the end, retire everything: both arenas
+    must drain to zero used pages."""
+    rng = np.random.default_rng(seed)
+    serving = ServingCfg(num_slots=3, page_size=2, num_pages=num_pages,
+                         escalated_pages=9, max_blocks_per_slot=4,
+                         low_watermark=0.5, critical_watermark=0.25,
+                         high_watermark=0.6)
+    pol = make_policy(policy)
+    pol.deescalate = True
+    sched = Scheduler(serving, tiered=tiered, policy=pol)
+    next_rid = 0
+    clock = 0
+    for _ in range(60):
+        op = rng.integers(0, 6)
+        clock += 1
+        if op == 0 and len(sched.queue) < 4:             # submit
+            # prompt + budget stays within max_len (= 8 here)
+            sched.submit(Request(
+                rid=next_rid, prompt=rng.integers(0, 7, rng.integers(1, 5))
+                .astype(np.int32), max_new_tokens=4,
+                slo=SloClass("x", priority=int(rng.integers(0, 3)),
+                             ttft_target=float(rng.integers(1, 50)))))
+            next_rid += 1
+        elif op == 1:                                    # admit (policy)
+            r = sched.admit_next(now=clock, step=clock)
+            if r is not None and rng.random() < 0.7:
+                sched.finish_prefill(r)
+        elif op == 2:                                    # chunk progress
+            pre = sched.prefilling()
+            if pre:
+                sched.note_chunk(pre[0], 2)
+                if pre[0].length >= pre[0].prefill_target:
+                    sched.finish_prefill(pre[0])
+        elif op == 3:                                    # grow / preempt
+            for r in list(sched.running()):
+                if r.state != "running":
+                    continue
+                r.length += 1
+                sched.lengths[r.slot] = r.length
+                while not sched.ensure_writable(r):
+                    if (r.length // serving.page_size
+                            >= serving.max_blocks_per_slot):
+                        sched.retire(r, clock, "length_cap")
+                        break
+                    v = sched.preemption_victim(exclude=r)
+                    if v is None:
+                        sched.retire(r, clock, "oom")
+                        break
+                    sched.preempt(v)
+        elif op == 4 and tiered:                         # escalate / recover
+            cand = sched.escalation_candidate()
+            if cand is not None:
+                sched.apply_escalation(cand)
+            elif (cand := sched.deescalation_candidate()) is not None:
+                sched.deescalate(cand)
+        else:                                            # retire someone
+            occ = sched.occupied()
+            if occ:
+                sched.retire(occ[int(rng.integers(len(occ)))], clock, "eos")
+        _check_invariants(sched, serving, tiered)
+    for r in list(sched.occupied()):
+        sched.retire(r, clock, "eos")
+    _check_invariants(sched, serving, tiered)
+    assert sched.dense_alloc.num_used == 0
+    if sched.cpq_alloc is not None:
+        assert sched.cpq_alloc.num_used == 0
