@@ -330,6 +330,137 @@ def policy_sweep(cfg, params, emit, *, rate: float = 2.0,
     return rows
 
 
+def make_burst_workload(seed: int, n_requests: int, vocab: int, rate: float,
+                        p_interactive: float = 0.4, alpha: float = 1.5):
+    """Heavy-tailed router traffic: Pareto inter-arrival gaps (bursty — most
+    gaps tiny, occasional long lulls, infinite variance at ``alpha <= 2``)
+    carrying the mixed Poisson-style class draw of ``make_slo_workload``
+    (interactive = short prompt/target + tight deadlines, batch = heavy
+    generation tail). Bursts are what make single-engine queueing collapse
+    and what placement policies must absorb. Returns (work, slos)."""
+    from repro.serving.request import SloClass
+
+    interactive = SloClass("interactive", priority=2, ttft_target=10.0,
+                           itl_target=4.0)
+    batch = SloClass("batch", priority=0, ttft_target=96.0, itl_target=16.0)
+    rng = np.random.default_rng(seed)
+    # Lomax (Pareto II) gaps scaled to the requested mean arrival rate:
+    # mean gap = scale / (alpha - 1)
+    scale = (alpha - 1.0) / max(rate, 1e-9)
+    t = 0.0
+    work, slos = [], []
+    for i in range(n_requests):
+        t += float(rng.pareto(alpha) * scale)
+        if rng.random() < p_interactive:
+            slo, plen, tgt = interactive, int(rng.integers(3, 9)), \
+                int(rng.integers(2, 7))
+        else:
+            # tail targets stay shorter than a replica's share of the trace:
+            # a lone straggler decoding at 1 token/step sets the lockstep
+            # clock and would cap aggregate scaling no matter the placement
+            slo = batch
+            plen = int(rng.integers(4, 28))
+            tgt = (int(rng.integers(16, 28)) if rng.random() < 0.25
+                   else int(rng.integers(2, 9)))
+        work.append(WorkItem(
+            rid=i, prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+            target=tgt, arrival=t))
+        slos.append(slo)
+    return work, slos
+
+
+def run_router(cfg, params, work: list[WorkItem], serving: ServingCfg, *,
+               num_replicas: int, placement: str = "load", slos=None,
+               donor=None):
+    """One ``ReplicaRouter`` run over the trace. Every replica gets its own
+    ``serving`` arena (data-parallel scale-out: capacity grows with replica
+    count, the paper's add-a-DIMM story). ``donor`` (any engine of the same
+    (cfg, rt)) shares its jitted step functions with every replica —
+    sweeping replica counts compiles once."""
+    from repro.serving.router import ReplicaRouter
+
+    router = ReplicaRouter(cfg, params, num_replicas=num_replicas,
+                           serving=serving, placement=placement)
+    if donor is not None:
+        for eng in router.engines:
+            eng.adopt_compiled(donor)
+    reqs = [Request(rid=w.rid, prompt=w.prompt, max_new_tokens=w.target,
+                    arrival=w.arrival,
+                    slo=None if slos is None else slos[i])
+            for i, w in enumerate(work)]
+    res, stats = router.serve(reqs, GenerationConfig(max_new_tokens=max(
+        w.target for w in work)))
+    out = {
+        "replicas": num_replicas,
+        "placement": stats["placement"],
+        "useful_tokens": stats["generated_tokens"],
+        "decode_steps_max": stats["decode_steps_max"],
+        "tokens_per_step": stats["tokens_per_step"],
+        "wall_time_s": stats["wall_time_s"],
+        "tokens_per_s": stats["tokens_per_s"],
+        "preemptions": stats["preemptions"],
+        "defrags": stats["defrags"],
+        "arena_bytes_total": stats["arena_bytes_total"],
+        "interconnect_bytes_per_token": stats["interconnect_bytes_per_token"],
+        "migrated_requests": stats["migrated_requests"],
+        "per_replica": stats["per_replica"],
+        "tokens": np.concatenate([res[w.rid]["tokens"] for w in work]),
+        "results": res,
+    }
+    # per-SLO-class tail TTFT on each replica's own tick clock (replicas
+    # tick in lockstep, so the clocks are comparable)
+    if slos is not None:
+        by_class: dict[str, list] = {}
+        for w, slo in zip(work, slos):
+            r = res[w.rid]
+            if r["first_token_step"] >= 0:
+                by_class.setdefault(slo.name, []).append(
+                    r["first_token_step"] - w.arrival)
+        for name, vals in by_class.items():
+            out[f"ttft_p95_{name}"] = float(np.percentile(vals, 95))
+    return out
+
+
+def replica_sweep(cfg, params, emit, *, counts=(1, 2, 4),
+                  placement: str = "load", rate: float = 6.0,
+                  n_requests: int = 64, num_slots: int = 4, seed: int = 0):
+    """Throughput-vs-replica-count table on ONE heavy-tailed burst trace:
+    aggregate tokens/step (total generated over the busiest replica's decode
+    clock) and per-SLO-class p95 TTFT at each count, with the per-replica
+    breakdown inline. Greedy decoding is asserted token-identical across
+    counts — placement moves requests between replicas, never changes what
+    they generate. Returns {count: run}."""
+    work, slos = make_burst_workload(seed, n_requests, cfg.vocab_size, rate)
+    max_len = max(len(w.prompt) + w.target for w in work)
+    serving = equal_arena_serving(num_slots, max_len, page_size=8)
+    # one never-served engine donates its jit wrappers to every replica of
+    # every count — the whole sweep compiles each step function once
+    donor = ContinuousServeEngine(cfg, params, serving=serving)
+    rows = {}
+    for n in counts:
+        r = rows[n] = run_router(cfg, params, work, serving, num_replicas=n,
+                                 placement=placement, slos=slos, donor=donor)
+        assert np.array_equal(rows[counts[0]]["tokens"], r["tokens"]), (
+            f"replicas={n} broke greedy token parity vs replicas={counts[0]}")
+        breakdown = "|".join(
+            f"r{p['replica']}:{p['generated_tokens']}tok"
+            f"@{p['tokens_per_step']:.2f}/step" for p in r["per_replica"])
+        emit(f"serving_router_n{n}", r["wall_time_s"] * 1e6,
+             f"placement={placement};"
+             f"agg_tok_per_step={r['tokens_per_step']:.2f};"
+             f"steps_max={r['decode_steps_max']};"
+             f"ttft_p95_hi={r.get('ttft_p95_interactive', 0.0):.1f};"
+             f"ttft_p95_lo={r.get('ttft_p95_batch', 0.0):.1f};"
+             f"arena_MiB_total={r['arena_bytes_total'] / 2**20:.3f};"
+             f"per_replica={breakdown}")
+    base = rows[counts[0]]
+    for n in counts[1:]:
+        emit(f"serving_router_scaling_n{n}", 0.0,
+             f"agg_vs_single={rows[n]['tokens_per_step'] / max(base['tokens_per_step'], 1e-9):.2f}x"
+             f" (ideal {n}.0x)")
+    return rows
+
+
 def paged_decode_step_latency(cfg, params, serving: ServingCfg, *,
                               use_paged_kernels: bool, n_iters: int = 30
                               ) -> float:
@@ -410,13 +541,25 @@ def mesh_sweep(cfg, params, emit, *, n_requests: int = 10, rate: float = 1.0):
 
 
 def main(emit, smoke: bool = False, mesh: bool = False,
-         policies=("fifo", "priority", "slo")):
+         policies=("fifo", "priority", "slo"), replicas: int = 0,
+         placement: str = "load"):
     from repro import kernels as K
 
     cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if mesh:
         mesh_sweep(cfg, params, emit)
+
+    # multi-replica router sweep on the heavy-tailed burst trace: aggregate
+    # tokens/step and per-class tail TTFT vs replica count
+    router_rows = None
+    if replicas:
+        counts = tuple(sorted({c for c in (1, 2, 4) if c <= replicas}
+                              | {replicas}))
+        # 96 requests: enough depth per replica that the end-of-trace drain
+        # (a ~fixed straggler cost) doesn't cap the measured scaling
+        router_rows = replica_sweep(cfg, params, emit, counts=counts,
+                                    placement=placement, n_requests=96)
     rates = (1.0,) if smoke else (0.25, 1.0, 4.0)
     n_requests = 12 if smoke else 32
     worst = 0.0
@@ -516,6 +659,20 @@ def main(emit, smoke: bool = False, mesh: bool = False,
             # benchmark the emulator, not the kernel; report only
             emit("serving_kernel_smoke", 0.0,
                  "SKIP latency bar (interpret mode; compiled-TPU only)")
+        if router_rows is not None and len(router_rows) > 1:
+            counts = sorted(router_rows)
+            hi, lo = counts[-1], counts[0]
+            scale = (router_rows[hi]["tokens_per_step"]
+                     / max(router_rows[lo]["tokens_per_step"], 1e-9))
+            # data-parallel scale-out bar: 4 replicas must deliver >= 3x the
+            # single-replica aggregate tokens/step on the burst trace
+            floor = 3.0 if hi >= 4 * max(lo, 1) else 0.75 * hi / max(lo, 1)
+            assert scale >= floor, (
+                f"router scaling {scale:.2f}x at {hi} replicas < "
+                f"{floor:.1f}x floor")
+            emit("serving_router_smoke", 0.0,
+                 f"PASS n{hi}_vs_n{lo}={scale:.2f}x >= {floor:.1f}x; "
+                 f"ttft_p95_hi={router_rows[hi].get('ttft_p95_interactive', 0.0):.1f}")
         emit("serving_smoke", 0.0, f"PASS speedup={worst:.2f}x")
 
 
@@ -532,6 +689,14 @@ if __name__ == "__main__":
                     help="scheduler policies to compare on the mixed-class "
                          "trace (SLO-attainment %% / Jain fairness table); "
                          "default runs all three")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="sweep the multi-replica router at 1..N replicas "
+                         "(subset of {1,2,4} plus N) on a heavy-tailed burst "
+                         "trace; with --smoke, 4 replicas must hit >= 3x the "
+                         "single-replica aggregate tokens/step (0 = skip)")
+    ap.add_argument("--placement", default="load",
+                    choices=["rr", "load", "slo"],
+                    help="router placement policy for --replicas")
     args = ap.parse_args()
 
     def emit(name, us, derived=""):
@@ -539,4 +704,5 @@ if __name__ == "__main__":
 
     pols = (("fifo", "priority", "slo") if args.policy == "all"
             else (args.policy,))
-    main(emit, smoke=args.smoke, mesh=args.mesh, policies=pols)
+    main(emit, smoke=args.smoke, mesh=args.mesh, policies=pols,
+         replicas=args.replicas, placement=args.placement)

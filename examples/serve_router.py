@@ -1,0 +1,90 @@
+"""Multi-replica router demo: two data-parallel engine replicas behind
+ReplicaRouter — SLO-aware placement of mixed INTERACTIVE/BATCH traffic,
+session affinity pinning a multi-turn conversation to its replica, and a
+mid-run drain that migrates in-flight requests to the surviving replica
+with token-for-token replay.
+
+  PYTHONPATH=src python examples/serve_router.py
+"""
+import numpy as np
+
+import jax
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.models import model as M
+from repro.serving import (BATCH, INTERACTIVE, ReplicaRouter, SamplingParams,
+                           ServeRequest)
+from repro.serving.paged_cache import pages_needed
+
+
+def main():
+    cfg = smoke_config(ARCHS["qwen3-4b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    max_len = 64
+    serving = ServingCfg(num_slots=2, page_size=8,
+                         num_pages=2 * pages_needed(max_len, 8) + 1,
+                         max_blocks_per_slot=pages_needed(max_len, 8),
+                         prefill_bucket=8, prefill_chunk=8)
+
+    # two replicas, each with its own scheduler + arenas; replica 0 compiles
+    # the step functions, replica 1 adopts them
+    router = ReplicaRouter(cfg, params, num_replicas=2, serving=serving,
+                           placement="slo")
+    router.reset()
+
+    # ---- mixed traffic: slo placement splits the classes -----------------
+    rids = {}
+    for i in range(3):  # batch jobs balance by outstanding tokens
+        rids[f"batch{i}"] = router.add_request(ServeRequest(
+            prompt=rng.integers(0, cfg.vocab_size, 12),
+            sampling=SamplingParams(max_tokens=16), slo=BATCH))
+    for i in range(2):  # interactive goes to the freest arena
+        rids[f"chat{i}"] = router.add_request(ServeRequest(
+            prompt=rng.integers(0, cfg.vocab_size, 6),
+            sampling=SamplingParams(temperature=0.8, top_k=40, seed=11 + i,
+                                    max_tokens=6),
+            slo=INTERACTIVE, session_id=f"user{i}"))
+    for name, rid in rids.items():
+        print(f"[place] {name:7s} rid={rid} -> replica "
+              f"{router.replica_of(rid)}")
+
+    # ---- session affinity: the follow-up turn lands on the same replica --
+    follow = router.add_request(ServeRequest(
+        prompt=rng.integers(0, cfg.vocab_size, 6),
+        sampling=SamplingParams(temperature=0.8, top_k=40, seed=99,
+                                max_tokens=6),
+        slo=INTERACTIVE, session_id="user0"))
+    print(f"[affinity] user0 follow-up rid={follow} -> replica "
+          f"{router.replica_of(follow)} (same as rid={rids['chat0']})")
+
+    # ---- run a few lockstep ticks, then drain replica 0 mid-flight -------
+    for _ in range(4):
+        router.step()
+    victim = 0
+    moved = router.drain(victim)
+    print(f"[drain] replica {victim} drained mid-run: {moved} in-flight "
+          f"requests migrated (recompute replay; seeded streams reproduce "
+          f"token-for-token), sessions remapped")
+
+    while router.has_unfinished():
+        router.step()
+
+    res = router.results()
+    stats = router.stats()
+    print(f"[done] {len(res)}/{len(rids) + 1} requests finished; aggregate "
+          f"{stats['tokens_per_step']:.2f} tok/step over "
+          f"{stats['decode_steps_max']} lockstep ticks; "
+          f"migrated={stats['migrated_requests']}, "
+          f"leaked_pages={stats['dense_pages_leaked']}")
+    for p in stats["per_replica"]:
+        tag = " (drained)" if p["draining"] else ""
+        print(f"  replica {p['replica']}{tag}: "
+              f"{p['generated_tokens'] or 0} tokens @ "
+              f"{(p['tokens_per_step'] or 0):.2f}/step")
+    print(f"[check] user0 turns ran on one replica, outputs exactly once, "
+          f"chat0 tokens: {res[rids['chat0']]['tokens'].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

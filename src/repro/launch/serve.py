@@ -52,6 +52,19 @@ def main(argv=None):
                          "SloClass levels + aging, slo = TTFT-slack EDF "
                          "admission with T2->dense de-escalation "
                          "(requires --continuous)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="data-parallel engine replicas behind a "
+                         "ReplicaRouter (serving/router.py); each replica "
+                         "owns its own scheduler and paged arenas and the "
+                         "router spreads requests over them (requires "
+                         "--continuous)")
+    ap.add_argument("--placement", default="rr",
+                    choices=["rr", "load", "slo"],
+                    help="router placement policy: rr = round-robin, load = "
+                         "least outstanding tokens, slo = latency-bound "
+                         "classes to the freest arena, deadline-free batch "
+                         "balanced by outstanding tokens (only with "
+                         "--replicas > 1)")
     ap.add_argument("--mesh", default=None, metavar="dp,mp",
                     help="serve over a device mesh: dp-way engine replication"
                          " x mp-way model sharding of the paged arenas "
@@ -75,6 +88,11 @@ def main(argv=None):
     if args.policy != "fifo" and not args.continuous:
         ap.error("--policy requires --continuous (the static engine has no "
                  "admission queue)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    if args.replicas > 1 and not args.continuous:
+        ap.error("--replicas requires --continuous (the router fans out "
+                 "over continuous-batching engines)")
     mesh = None
     if args.mesh:
         if not args.continuous:
@@ -94,7 +112,18 @@ def main(argv=None):
             num_pages=args.batch * pages_needed(n_max, 16) + 1,
             max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16,
             prefill_chunk=args.prefill_chunk, policy=args.policy)
-        eng = ContinuousServeEngine(cfg, params, serving=serving, mesh=mesh)
+        if args.replicas > 1:
+            from repro.serving import ReplicaRouter
+
+            eng = ReplicaRouter(cfg, params, num_replicas=args.replicas,
+                                serving=serving, placement=args.placement,
+                                mesh=mesh)
+            print(f"[serve] router: {args.replicas} replicas, "
+                  f"placement={args.placement} "
+                  f"({args.replicas * args.batch} slots aggregate)")
+        else:
+            eng = ContinuousServeEngine(cfg, params, serving=serving,
+                                        mesh=mesh)
         print(f"[serve] policy={args.policy}; chunked prefill: "
               f"{'on, chunk=' + str(args.prefill_chunk) if eng.chunked else 'off (one-shot admission)'}")
         if mesh is not None:
@@ -132,6 +161,14 @@ def main(argv=None):
               f"total; interconnect "
               f"{stats['interconnect_bytes_per_token']:.1f} B/token "
               "(per-head partial concat + latent pool gathers)")
+    if args.replicas > 1:
+        rows = ", ".join(
+            f"r{p['replica']}: {p['generated_tokens']} tok @ "
+            f"{p['tokens_per_step']:.2f}/step"
+            for p in stats["per_replica"])
+        print(f"[serve] router aggregate: "
+              f"{stats['tokens_per_step']:.2f} tok/step over "
+              f"{stats['decode_steps_max']} lockstep ticks ({rows})")
     print(f"[serve] arch={cfg.name} mode={mode}")
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
           f"({out.size / max(dt, 1e-9):.1f} tok/s batch-aggregate)")

@@ -6,11 +6,14 @@ Modules:
   request     — the public request-centric API dataclasses (SamplingParams,
                 SloClass, ServeRequest, RequestOutput)
   policies    — pluggable SchedulerPolicy implementations (fifo / priority /
-                slo-aware with de-escalation)
+                slo-aware with de-escalation) and PlacementPolicy
+                implementations for the replica router (rr / load / slo)
   scheduler   — host-side admission queue, slot table, watermark mechanisms
   engine      — ServeEngine (static batch) + ContinuousServeEngine
                 (add_request()/step() streaming interface; serve()/generate()
                 batch wrappers)
+  router      — ReplicaRouter: data-parallel fan-out over N engine replicas
+                with SLO-aware placement, session affinity, and drain
 
 Engine symbols are re-exported lazily (PEP 562) so importing
 ``repro.serving.paged_cache`` from the model stack does not recurse through
@@ -22,10 +25,13 @@ _SCHEDULER_EXPORTS = ("Request", "Scheduler", "SchedulerConfigError")
 _REQUEST_EXPORTS = ("SamplingParams", "SloClass", "ServeRequest",
                     "RequestOutput", "INTERACTIVE", "STANDARD", "BATCH")
 _POLICY_EXPORTS = ("SchedulerPolicy", "FifoPolicy", "PriorityPolicy",
-                   "SloAwarePolicy", "make_policy")
+                   "SloAwarePolicy", "make_policy", "PlacementPolicy",
+                   "ReplicaView", "RoundRobinPlacement", "LeastLoadedPlacement",
+                   "SloPressurePlacement", "make_placement")
+_ROUTER_EXPORTS = ("ReplicaRouter",)
 
 __all__ = list(_ENGINE_EXPORTS + _SCHEDULER_EXPORTS + _REQUEST_EXPORTS
-               + _POLICY_EXPORTS)
+               + _POLICY_EXPORTS + _ROUTER_EXPORTS)
 
 
 def __getattr__(name):
@@ -41,4 +47,7 @@ def __getattr__(name):
     if name in _POLICY_EXPORTS:
         from repro.serving import policies
         return getattr(policies, name)
+    if name in _ROUTER_EXPORTS:
+        from repro.serving import router
+        return getattr(router, name)
     raise AttributeError(name)

@@ -550,7 +550,8 @@ class ContinuousServeEngine:
             req = Request(rid=rid, prompt=req.prompt,
                           max_new_tokens=req.sampling.max_tokens,
                           arrival=req.arrival, sampling=req.sampling,
-                          slo=req.slo, stream=stream or req.stream)
+                          slo=req.slo, stream=stream or req.stream,
+                          session_id=req.session_id)
         elif stream is not None:
             req.stream = stream
         if (req.rid in st.results
@@ -580,8 +581,77 @@ class ContinuousServeEngine:
 
     def results(self) -> dict[int, dict]:
         """Finished-request records so far: rid -> {tokens, finish_reason,
-        admitted_step, token_steps, slo/priority metadata, ...}."""
-        return dict(self._ensure_state().results)
+        admitted_step, token_steps, slo/priority metadata, ...}. Empty
+        when no session is live (does not build one)."""
+        return dict(self._st.results) if self._st is not None else {}
+
+    # ------------------------------------------------ router support surface
+
+    def adopt_compiled(self, other: "ContinuousServeEngine") -> None:
+        """Share ``other``'s jitted step functions and compile caches.
+        Data-parallel replicas of the same (cfg, rt) run the same
+        executables — N replicas, one compile. ``ServingCfg`` may differ
+        (the jitted functions never close over it; shape changes retrace
+        inside the shared jit wrappers)."""
+        assert other.cfg == self.cfg and other.rt == self.rt, (
+            "adopt_compiled requires an identical (cfg, rt) pair")
+        for name in ("_decode", "_pack", "_escalate", "_defrag",
+                     "_sample_rows"):
+            setattr(self, name, getattr(other, name))
+        self._prefills = other._prefills
+        self._chunk_fns = other._chunk_fns
+
+    def arena_stats(self) -> dict:
+        """Public allocator surface (``Scheduler.arena_stats()``) plus the
+        dense free-page fraction — the arena-pressure signal placement
+        policies read before assigning a request to this engine."""
+        sched = self._ensure_state().sched
+        return {**sched.arena_stats(), "free_frac": sched.free_frac()}
+
+    def outstanding_tokens(self) -> int:
+        """Work still owed across queued and resident requests: prefill
+        tokens not yet streamed into the arena plus undelivered generation
+        budget. The load signal least-outstanding placement balances on."""
+        st = self._st
+        if st is None:
+            return 0
+        total = 0
+        for r in list(st.sched.queue) + st.sched.occupied():
+            total += max(len(r.prompt) + r.num_generated - r.length, 0)
+            total += max(r.max_new_tokens - r.num_generated, 0)
+        return total
+
+    def drain(self) -> list[Request]:
+        """Snapshot every incomplete request (queued, mid-prefill, or
+        decoding) for replay re-admission elsewhere and free their pages.
+
+        Slot holders leave through the existing recompute-preemption path
+        (``Scheduler.preempt``: pages freed, state back to queued, context
+        = prompt + generated-so-far, pinned ``SamplingParams`` preserved),
+        then the whole queue is handed over. Feeding the returned records
+        to ``add_request`` on another engine replays each context exactly:
+        greedy rows are deterministic and seeded rows re-draw
+        ``fold_in(seed, token_index)`` keys, so the remaining stream
+        reproduces token-for-token after migration. Finished-request
+        results and session counters stay on this engine (``results()`` /
+        ``stats()``); call ``release()`` to drop the arenas afterwards."""
+        st = self._st
+        if st is None:
+            return []
+        sched = st.sched
+        for req in sorted(sched.occupied(), key=lambda r: r.admitted_step):
+            slot = req.slot
+            sched.preempt(req)
+            self._clear_row_sampling(st, slot)
+        out = sorted(sched.queue, key=lambda r: (r.arrival, r.rid))
+        sched.queue.clear()
+        return out
+
+    def release(self) -> None:
+        """Drop the live serving session — scheduler, arenas (device
+        memory goes with them), sampling arrays, output buffers. The next
+        ``add_request()`` / ``reset()`` starts a fresh session."""
+        self._st = None
 
     # ----------------------------------------------------- result plumbing
 
@@ -589,6 +659,7 @@ class ContinuousServeEngine:
         slo = req.slo
         return {
             "tokens": np.asarray(req.generated, np.int32),
+            "session": req.session_id,
             "finish_reason": req.finish_reason,
             "arrival": req.arrival,
             "admitted_step": req.admitted_step,

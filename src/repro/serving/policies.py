@@ -1,4 +1,5 @@
-"""Pluggable scheduler policies: WHO gets admitted, preempted, escalated.
+"""Pluggable scheduler policies: WHO gets admitted, preempted, escalated —
+and, for the multi-replica router, WHERE a request is placed.
 
 ``serving/scheduler.py`` keeps the mechanisms — page allocation, slot
 bookkeeping, state transitions — and delegates every *decision* to a
@@ -44,6 +45,7 @@ never immediately re-escalated by the same watermark that moved it out.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import TYPE_CHECKING, Optional, Protocol, runtime_checkable
 
@@ -281,3 +283,104 @@ def make_policy(name: str, **kw) -> SchedulerPolicy:
     except KeyError:
         raise ValueError(f"unknown scheduler policy {name!r}; "
                          f"choose from {sorted(_POLICIES)}") from None
+
+
+# --------------------------------------------------- replica placement (router)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaView:
+    """Read-only snapshot of one engine replica at placement time (built by
+    ``ReplicaRouter`` from public engine surfaces; draining replicas are
+    never offered). ``outstanding_tokens`` is the replica's owed work
+    (``engine.outstanding_tokens()``: unprefilled context + undelivered
+    generation budget); ``free_frac`` its dense free-page fraction
+    (``engine.arena_stats()``)."""
+
+    index: int
+    outstanding_tokens: int
+    free_frac: float
+
+
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """WHERE a request runs: consulted by ``ReplicaRouter.add_request`` with
+    the non-draining replicas (ordered by index, never empty) AFTER session
+    affinity — a pinned session bypasses placement entirely. Must return
+    the ``.index`` of one offered view, deterministically (routing is
+    replayable, like scheduling)."""
+
+    name: str
+
+    def select(self, views: list[ReplicaView], req: "Request") -> int:
+        ...
+
+
+class RoundRobinPlacement:
+    """Cycle over the offered replicas in order — the zero-knowledge
+    baseline. Stateful cursor; a drained replica simply drops out of the
+    rotation."""
+
+    name = "rr"
+
+    def __init__(self):
+        self._turn = 0
+
+    def select(self, views, req):
+        v = views[self._turn % len(views)]
+        self._turn += 1
+        return v.index
+
+
+class LeastLoadedPlacement:
+    """Least outstanding tokens first (ties by replica index): balances the
+    owed work — remaining prefill plus undelivered generation budget —
+    rather than raw request counts, so a replica chewing a long-context
+    batch job stops attracting traffic before its queue length shows it."""
+
+    name = "load"
+
+    def select(self, views, req):
+        return min(views, key=lambda v: (v.outstanding_tokens, v.index)).index
+
+
+class SloPressurePlacement:
+    """SLO- and arena-pressure-aware placement.
+
+    Latency-bound requests (a finite ``ttft_target`` or priority at/above
+    ``interactive_priority``) go to the replica with the MOST free pages
+    (ties: least outstanding) — a pressured replica would admit them into
+    the compressed tier, queue them behind watermark churn, or preempt
+    them, all of which burn TTFT/ITL slack. Deadline-free batch work packs
+    by least outstanding tokens instead (ties: most free pages), keeping
+    throughput balanced without competing for the headroom the latency
+    classes need."""
+
+    name = "slo"
+
+    def __init__(self, interactive_priority: int = 2):
+        self.interactive_priority = interactive_priority
+
+    def select(self, views, req):
+        slo = slo_of(req)
+        latency_bound = (math.isfinite(slo.ttft_target)
+                         or slo.priority >= self.interactive_priority)
+        if latency_bound:
+            return max(views, key=lambda v: (v.free_frac,
+                                             -v.outstanding_tokens,
+                                             -v.index)).index
+        return min(views, key=lambda v: (v.outstanding_tokens,
+                                         -v.free_frac, v.index)).index
+
+
+_PLACEMENTS = {"rr": RoundRobinPlacement, "load": LeastLoadedPlacement,
+               "slo": SloPressurePlacement}
+
+
+def make_placement(name: str, **kw) -> PlacementPolicy:
+    """Placement factory for CLI / config strings: rr | load | slo."""
+    try:
+        return _PLACEMENTS[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown placement policy {name!r}; "
+                         f"choose from {sorted(_PLACEMENTS)}") from None

@@ -96,7 +96,11 @@ class ServeRequest:
     """User-facing request spec. ``prompt`` is any int sequence; ``stream``
     (optional) is called with each ``RequestOutput`` as it is committed.
     ``arrival`` is in decode-step units (0.0 = already arrived), matching
-    the engine's simulation clock."""
+    the engine's simulation clock. ``session_id`` (optional) names a
+    multi-turn conversation: the replica router pins every request of a
+    session to the replica that served its earlier turns (the replica
+    holding the session's arena pages), remapping only on drain — a single
+    engine ignores it."""
 
     prompt: np.ndarray
     sampling: SamplingParams = SamplingParams()
@@ -104,6 +108,7 @@ class ServeRequest:
     rid: Optional[int] = None          # None => engine assigns the next id
     arrival: float = 0.0
     stream: Optional[Callable[["RequestOutput"], None]] = None
+    session_id: Optional[str] = None   # replica-affinity key (router)
 
     def __post_init__(self):
         object.__setattr__(self, "prompt",

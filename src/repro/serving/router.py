@@ -1,0 +1,335 @@
+"""Multi-replica serving router: data-parallel scale-out of the engine.
+
+The paper's end-to-end claim is that PIM serving scales by adding memory
+channels, not by fattening one compute unit — every extra DIMM brings its
+own bandwidth AND its own capacity. The serving analogue is data
+parallelism over whole engines: ``ReplicaRouter`` owns N independent
+``ContinuousServeEngine`` replicas (each with its own ``Scheduler``, paged
+arenas, and tick loop) and fronts them with the SAME request-centric
+surface — ``add_request() / step() / pending_outputs() / results() /
+stats()`` plus the ``serve()/generate()`` wrappers — so callers written
+against one engine drive N without change. One router ``step()`` ticks
+every healthy replica once (the replicas of a real deployment tick in
+parallel; aggregate tokens/step is measured against the slowest replica's
+clock).
+
+Three concerns the single engine cannot express live here:
+
+  placement         WHERE a new request runs. Pluggable ``PlacementPolicy``
+                    (serving/policies.py): ``rr`` round-robin, ``load``
+                    least-outstanding-tokens, ``slo`` SLO/arena-pressure-
+                    aware (reads each replica's ``arena_stats()`` free-page
+                    fraction and the request's ``SloClass`` before
+                    assigning).
+  session affinity  a ``ServeRequest.session_id`` pins every follow-up turn
+                    of a conversation to the replica that served its earlier
+                    turns — the replica holding the session's arena pages —
+                    bypassing placement until the session's replica drains.
+  drain             ``drain(i)`` removes a replica from service: placements
+                    stop, its incomplete requests are snapshotted by the
+                    engine's ``drain()`` (the recompute-preemption replay
+                    path: context = prompt + generated-so-far, pinned
+                    SamplingParams) and re-queued onto healthy replicas —
+                    seeded sampling reproduces token-for-token after the
+                    migration because draws are ``fold_in(seed,
+                    token_index)``, a function of the request alone — and
+                    the replica's arenas are freed (``release()``). Sessions
+                    pinned to it are remapped with their migrated requests.
+
+Request ids are router-global (collisions across replicas would corrupt the
+merged ``results()``), and every ``RequestOutput`` is delivered exactly
+once: engine buffers drain into the router buffer each tick, and a drain
+hands un-emitted work over BEFORE the source session is dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.configs.base import AttentionRuntime, ModelConfig, ServingCfg
+from repro.serving.engine import ContinuousServeEngine, GenerationConfig
+from repro.serving.policies import PlacementPolicy, ReplicaView, make_placement
+from repro.serving.request import RequestOutput, ServeRequest
+from repro.serving.scheduler import Request, SchedulerConfigError
+
+
+class ReplicaRouter:
+    """Front end over N data-parallel ``ContinuousServeEngine`` replicas.
+
+    Construction builds the replicas (replica 0 compiles; the rest adopt
+    its jitted step functions — same (cfg, rt), same executables).
+    ``placement`` is a ``PlacementPolicy`` object or name (``rr`` | ``load``
+    | ``slo``); ``policy``/``serving``/``rt``/``mesh`` are forwarded to
+    every replica engine (under a mesh each replica model-shards its arenas
+    over the same devices — the ``data`` axis of a real deployment is the
+    replica set itself)."""
+
+    def __init__(self, cfg: ModelConfig, params, num_replicas: int = 2,
+                 rt: Optional[AttentionRuntime] = None,
+                 serving: ServingCfg = ServingCfg(),
+                 placement: Union[str, PlacementPolicy] = "rr",
+                 policy=None, mesh=None):
+        if num_replicas < 1:
+            raise SchedulerConfigError("num_replicas must be >= 1")
+        self.serving = serving
+        self.engines: list[ContinuousServeEngine] = []
+        for _ in range(num_replicas):
+            eng = ContinuousServeEngine(cfg, params, rt=rt, serving=serving,
+                                        mesh=mesh, policy=policy)
+            if self.engines:
+                eng.adopt_compiled(self.engines[0])
+            self.engines.append(eng)
+        self.placement = (make_placement(placement)
+                          if isinstance(placement, str) else placement)
+        self._fresh()
+
+    # ------------------------------------------------------- session state
+
+    def _fresh(self) -> None:
+        self._draining: set[int] = set()
+        self._sessions: dict[str, int] = {}     # session_id -> replica
+        self._rid_replica: dict[int, int] = {}  # rid -> current replica
+        self._archived: dict[int, dict] = {}    # results of drained replicas
+        self._drained_stats: dict[int, dict] = {}
+        self._outputs: list[RequestOutput] = []
+        self._next_rid = 0
+        self._ticks = 0
+        self._migrated = 0
+
+    def reset(self, gen: GenerationConfig = GenerationConfig()) -> None:
+        """Fresh serving session on every replica (drained replicas rejoin);
+        clears the session map, rid registry, and output buffer."""
+        for eng in self.engines:
+            eng.reset(gen)
+        self._fresh()
+
+    @property
+    def num_replicas(self) -> int:
+        return len(self.engines)
+
+    @property
+    def chunked(self) -> bool:
+        """Admission-path flag, mirrored from the replicas (engine-surface
+        compatibility for callers that report it)."""
+        return self.engines[0].chunked
+
+    def healthy(self) -> list[int]:
+        """Replica indices currently accepting placements."""
+        return [i for i in range(len(self.engines)) if i not in self._draining]
+
+    def replica_of(self, rid: int) -> Optional[int]:
+        """The replica currently (or last) responsible for ``rid`` — the
+        placement record, updated on migration."""
+        return self._rid_replica.get(rid)
+
+    # ---------------------------------------------------------- placement
+
+    def _views(self) -> list[ReplicaView]:
+        return [ReplicaView(index=i,
+                            outstanding_tokens=self.engines[i]
+                            .outstanding_tokens(),
+                            free_frac=self.engines[i]
+                            .arena_stats()["free_frac"])
+                for i in self.healthy()]
+
+    def _place(self, req: Union[ServeRequest, Request]) -> int:
+        """Session affinity first (a mapped session bypasses placement while
+        its replica is healthy), then the placement policy over the healthy
+        replicas; a session's first request records the mapping."""
+        views = self._views()
+        if not views:
+            raise SchedulerConfigError(
+                "no healthy replicas: every replica is draining")
+        sid = req.session_id
+        if sid is not None:
+            pinned = self._sessions.get(sid)
+            if pinned is not None and pinned not in self._draining:
+                return pinned
+        target = self.placement.select(views, req)
+        if sid is not None:
+            self._sessions[sid] = target
+        return target
+
+    # ------------------------------------------------- request-centric API
+
+    def add_request(self, req: Union[ServeRequest, Request], *,
+                    stream=None) -> int:
+        """Place one request on a replica (session affinity, then the
+        placement policy) and submit it there. Request ids are router-global
+        — an explicit rid colliding with any live or archived request
+        raises; omitted rids auto-assign from the router's counter."""
+        if isinstance(req, ServeRequest) and req.rid is None:
+            req = dataclasses.replace(req, rid=self._next_rid)
+        rid = req.rid
+        if rid in self._rid_replica or rid in self._archived:
+            raise SchedulerConfigError(
+                f"request id {rid} already in use this session "
+                "(omit ServeRequest.rid to auto-assign)")
+        target = self._place(req)
+        self.engines[target].add_request(req, stream=stream)
+        self._rid_replica[rid] = target
+        self._next_rid = max(self._next_rid, rid + 1)
+        return rid
+
+    def step(self) -> list[RequestOutput]:
+        """One router tick: every healthy replica with work runs one engine
+        tick (a real deployment's replicas tick in parallel — the router
+        tick is the wall-clock unit). Returns the tick's merged
+        ``RequestOutput`` events in replica order (also buffered for
+        ``pending_outputs``; per-request ``stream`` callbacks fire inline,
+        on the owning replica)."""
+        events: list[RequestOutput] = []
+        worked = False
+        for i, eng in enumerate(self.engines):
+            if i in self._draining or not eng.has_unfinished():
+                continue
+            worked = True
+            eng.step()
+            events.extend(eng.pending_outputs())
+        if worked:
+            self._ticks += 1
+        self._outputs.extend(events)
+        return events
+
+    def has_unfinished(self) -> bool:
+        return any(i not in self._draining and eng.has_unfinished()
+                   for i, eng in enumerate(self.engines))
+
+    def pending_outputs(self) -> list[RequestOutput]:
+        """Drain the router-level buffer of everything committed since the
+        last drain (``step()`` also returns its tick's events directly)."""
+        out, self._outputs = self._outputs, []
+        return out
+
+    def results(self) -> dict[int, dict]:
+        """Merged finished-request records: drained replicas' archives plus
+        every live replica's results. rids are router-global, so the merge
+        is collision-free."""
+        out = dict(self._archived)
+        for eng in self.engines:
+            out.update(eng.results())
+        return out
+
+    # --------------------------------------------------------------- drain
+
+    def drain(self, replica: int) -> int:
+        """Take ``replica`` out of service: stop placements to it, snapshot
+        its incomplete requests through ``engine.drain()`` (the recompute-
+        preemption replay path), archive its finished results and stats,
+        free its arenas (``engine.release()``), and re-queue the snapshot
+        onto healthy replicas via the normal placement path — sessions
+        pinned to the drained replica are remapped with their requests.
+        Returns the number of requests migrated. Refuses to drain the last
+        healthy replica (its work would have nowhere to go)."""
+        if replica in self._draining:
+            return 0
+        if not (0 <= replica < len(self.engines)):
+            raise SchedulerConfigError(f"no replica {replica}")
+        if set(self.healthy()) == {replica}:
+            raise SchedulerConfigError(
+                "cannot drain the last healthy replica")
+        eng = self.engines[replica]
+        self._draining.add(replica)
+        had_state = eng._st is not None
+        if had_state:
+            self._outputs.extend(eng.pending_outputs())  # nothing left behind
+            self._archived.update(eng.results())
+        moved = eng.drain()
+        if had_state:
+            # snapshot AFTER drain: pages freed, drain preemptions counted
+            self._drained_stats[replica] = eng.stats()
+        eng.release()
+        self._sessions = {s: r for s, r in self._sessions.items()
+                          if r != replica}
+        for req in moved:
+            target = self._place(req)
+            self.engines[target].add_request(req)
+            self._rid_replica[req.rid] = target
+        self._migrated += len(moved)
+        return len(moved)
+
+    # --------------------------------------------------------------- stats
+
+    _SUM_KEYS = ("generated_tokens", "prefill_tokens", "prefill_chunks",
+                 "decode_steps", "arena_bytes_total", "arena_bytes_per_device",
+                 "interconnect_bytes", "decode_traffic_bytes",
+                 "prefill_write_bytes", "defrags", "preemptions",
+                 "escalations", "deescalations", "admitted", "retired",
+                 "dense_pages_leaked", "cpq_pages_leaked")
+    _REPLICA_KEYS = ("tokens_per_step", "generated_tokens", "decode_steps",
+                     "prefill_tokens", "arena_bytes_total",
+                     "interconnect_bytes", "defrags", "preemptions",
+                     "escalations", "deescalations", "slot_utilization",
+                     "dense_arena_utilization", "policy")
+
+    def stats(self) -> dict:
+        """One aggregated surface over all replicas plus the per-replica
+        breakdown. Counters sum; ``tokens_per_step`` is the AGGREGATE
+        throughput — total generated tokens against the slowest replica's
+        decode clock (replicas tick in parallel, so the busiest replica is
+        the wall clock). Drained replicas contribute their drain-time
+        snapshot."""
+        per_replica = []
+        for i, eng in enumerate(self.engines):
+            s = self._drained_stats.get(i)
+            if s is None:
+                # a replica with no serving session yet (or released) has no
+                # counters to report — don't build arenas just to read zeros
+                s = eng.stats() if eng._st is not None else {}
+            row = {"replica": i, "draining": i in self._draining}
+            row.update({k: s.get(k) for k in self._REPLICA_KEYS})
+            per_replica.append((row, s))
+        agg: dict = {
+            "replicas": len(self.engines),
+            "placement": self.placement.name,
+            "draining": sorted(self._draining),
+            "drains": len(self._draining),
+            "migrated_requests": self._migrated,
+            "router_ticks": self._ticks,
+        }
+        for k in self._SUM_KEYS:
+            agg[k] = sum(s.get(k, 0) or 0 for _, s in per_replica)
+        busiest = max((s.get("decode_steps", 0) for _, s in per_replica),
+                      default=0)
+        agg["decode_steps_max"] = busiest
+        agg["tokens_per_step"] = agg["generated_tokens"] / max(busiest, 1)
+        agg["interconnect_bytes_per_token"] = (
+            agg["interconnect_bytes"] / max(agg["generated_tokens"], 1))
+        agg["wall_time_s"] = max(s.get("wall_time_s", 0.0)
+                                 for _, s in per_replica)
+        agg["tokens_per_s"] = agg["generated_tokens"] / max(
+            agg["wall_time_s"], 1e-9)
+        agg["per_replica"] = [row for row, _ in per_replica]
+        return agg
+
+    # ----------------------------------------------------- batch wrappers
+
+    def serve(self, requests: list[Union[Request, ServeRequest]],
+              gen: GenerationConfig = GenerationConfig()):
+        """Batch-shaped wrapper, signature-compatible with the engine's:
+        resets every replica, places and submits all requests in arrival
+        order, ticks to completion. Returns (merged results, aggregate
+        stats)."""
+        self.reset(gen)
+        for r in sorted(requests, key=lambda r: r.arrival):
+            self.add_request(r)
+        while self.has_unfinished():
+            self.step()
+        return self.results(), self.stats()
+
+    def generate(self, batch: dict, gen: GenerationConfig = GenerationConfig()):
+        """Static-engine-compatible convenience (same contract as
+        ``ContinuousServeEngine.generate``), spread over the replicas."""
+        prompt = np.asarray(batch["tokens"])
+        reqs = [Request(rid=i, prompt=prompt[i],
+                        max_new_tokens=gen.max_new_tokens)
+                for i in range(prompt.shape[0])]
+        results, stats = self.serve(reqs, gen)
+        pad = gen.eos_id if gen.eos_id >= 0 else 0
+        out = np.full((prompt.shape[0], gen.max_new_tokens), pad, np.int32)
+        for i in range(prompt.shape[0]):
+            t = results[i]["tokens"]
+            out[i, :len(t)] = t[:gen.max_new_tokens]
+        return out, stats

@@ -77,6 +77,7 @@ class Request:
     sampling: Optional[SamplingParams] = None
     slo: Optional[SloClass] = None          # policies read via slo_of()
     stream: Optional[Callable] = None       # per-token RequestOutput callback
+    session_id: Optional[str] = None        # replica-affinity key (router)
     # -- scheduler-owned state --
     state: str = "queued"                   # queued | prefilling | running | done
     slot: int = -1

@@ -1,0 +1,366 @@
+"""Multi-replica router suite: single-replica token parity vs the bare
+engine, placement-policy unit decisions, session affinity, drain/re-queue
+(greedy AND seeded-sampling token parity after migration), the engine-level
+drain snapshot, stats aggregation, and the hypothesis property that ANY
+interleaving of add / step / drain delivers every request's output exactly
+once — no lost rids, no duplicated (rid, index) events — with the allocator
+invariants green on every replica."""
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import hypothesis, st  # optional dep; see pyproject
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.models import model as M
+from repro.serving.engine import ContinuousServeEngine, GenerationConfig
+from repro.serving.paged_cache import NULL_PAGE
+from repro.serving.policies import (LeastLoadedPlacement, ReplicaView,
+                                    RoundRobinPlacement, SloPressurePlacement,
+                                    make_placement)
+from repro.serving.request import (BATCH, INTERACTIVE, SamplingParams,
+                                   ServeRequest)
+from repro.serving.router import ReplicaRouter
+from repro.serving.scheduler import Request, SchedulerConfigError
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+SERVING = ServingCfg(num_slots=2, page_size=4, num_pages=33,
+                     max_blocks_per_slot=8, prefill_bucket=4, prefill_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def donor(model):
+    """One engine donates its jit wrappers to every router in the module —
+    the whole suite compiles each step function once."""
+    cfg, params = model
+    return ContinuousServeEngine(cfg, params, serving=SERVING)
+
+
+def _router(model, donor, n, placement="rr"):
+    cfg, params = model
+    r = ReplicaRouter(cfg, params, num_replicas=n, serving=SERVING,
+                      placement=placement)
+    for eng in r.engines:
+        eng.adopt_compiled(donor)
+    return r
+
+
+def _reqs(n=6, seed=0, max_tokens=6, sampled=False, session=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        sp = (SamplingParams(temperature=0.8, top_k=10, seed=7 + i,
+                             max_tokens=max_tokens) if sampled
+              else SamplingParams(max_tokens=max_tokens))
+        out.append(ServeRequest(
+            prompt=rng.integers(1, 200, size=int(rng.integers(3, 10))),
+            sampling=sp, slo=INTERACTIVE if i % 2 else BATCH,
+            arrival=float(i // 2),
+            session_id=None if session is None else session(i)))
+    return out
+
+
+def _check_alloc(eng):
+    """No leaked / double-owned pages on a live replica."""
+    sched = eng._st.sched
+    owned = [p for r in sched.occupied() if r.tier == 0 for p in r.pages]
+    assert len(set(owned)) == len(owned), "double-owned page"
+    assert NULL_PAGE not in owned
+    assert sched.dense_alloc.num_used == len(owned), "leaked/phantom pages"
+
+
+# ------------------------------------------------------------ parity (N=1)
+
+
+def test_single_replica_matches_bare_engine(model, donor):
+    cfg, params = model
+    reqs = _reqs()
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    res_e, stats_e = eng.serve(reqs)
+    router = _router(model, donor, 1)
+    res_r, stats_r = router.serve(reqs)
+    assert set(res_r) == set(res_e)
+    for rid in res_e:
+        assert list(res_r[rid]["tokens"]) == list(res_e[rid]["tokens"])
+        assert res_r[rid]["finish_reason"] == res_e[rid]["finish_reason"]
+    assert stats_r["generated_tokens"] == stats_e["generated_tokens"]
+    assert stats_r["decode_steps_max"] == stats_e["decode_steps"]
+
+
+# --------------------------------------------------- placement policy units
+
+
+def _views(*pairs):
+    return [ReplicaView(index=i, outstanding_tokens=o, free_frac=f)
+            for i, (o, f) in enumerate(pairs)]
+
+
+def test_round_robin_cycles_over_views():
+    p = RoundRobinPlacement()
+    views = _views((0, 1.0), (0, 1.0), (0, 1.0))
+    picks = [p.select(views, None) for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+    # the cursor keeps cycling over whatever views remain after a drain
+    assert p.select(views[:2], None) in (0, 1)
+
+
+def test_least_loaded_picks_min_outstanding():
+    p = LeastLoadedPlacement()
+    assert p.select(_views((30, 0.9), (10, 0.1), (20, 0.5)), None) == 1
+    # deterministic tie-break on index
+    assert p.select(_views((10, 0.2), (10, 0.8)), None) == 0
+
+
+def test_slo_placement_splits_classes():
+    p = SloPressurePlacement()
+    views = _views((40, 0.8), (5, 0.2))
+    hot = Request(rid=0, prompt=np.ones(4, np.int32), max_new_tokens=4,
+                  slo=INTERACTIVE)
+    cold = Request(rid=1, prompt=np.ones(4, np.int32), max_new_tokens=4,
+                   slo=BATCH)
+    # latency-bound class -> freest arena even if busier; deadline-free
+    # batch balances by outstanding tokens instead
+    assert p.select(views, hot) == 0
+    assert p.select(views, cold) == 1
+
+
+def test_make_placement_rejects_unknown():
+    assert make_placement("rr").name == "rr"
+    with pytest.raises(ValueError):
+        make_placement("nope")
+
+
+# ---------------------------------------------------------- session affinity
+
+
+def test_session_affinity_pins_follow_up_turns(model, donor):
+    router = _router(model, donor, 2, placement="rr")
+    router.reset()
+    sid = lambda i: "chat" if i % 2 == 0 else None  # noqa: E731
+    rids = [router.add_request(r) for r in _reqs(6, session=sid)]
+    pinned = {router.replica_of(rids[i]) for i in (0, 2, 4)}
+    assert len(pinned) == 1, "session requests spread over replicas"
+    free = [router.replica_of(rids[i]) for i in (1, 3, 5)]
+    assert len(set(free)) == 2, "round-robin stopped spreading the rest"
+    while router.has_unfinished():
+        router.step()
+    assert len(router.results()) == 6
+
+
+def test_session_remaps_after_drain(model, donor):
+    router = _router(model, donor, 2, placement="rr")
+    router.reset()
+    rid0 = router.add_request(ServeRequest(
+        prompt=np.arange(1, 6), session_id="s0",
+        sampling=SamplingParams(max_tokens=4)))
+    home = router.replica_of(rid0)
+    router.drain(home)
+    rid1 = router.add_request(ServeRequest(
+        prompt=np.arange(1, 6), session_id="s0",
+        sampling=SamplingParams(max_tokens=4)))
+    assert router.replica_of(rid0) == router.replica_of(rid1) != home
+    while router.has_unfinished():
+        router.step()
+    assert set(router.results()) == {rid0, rid1}
+
+
+# ------------------------------------------------------------ drain/re-queue
+
+
+def test_drain_migrates_and_finishes_greedy_parity(model, donor):
+    cfg, params = model
+    reqs = _reqs(6)
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    ref, _ = eng.serve(reqs)
+
+    router = _router(model, donor, 2, placement="load")
+    router.reset()
+    rids = [router.add_request(r) for r in reqs]
+    for _ in range(4):
+        router.step()
+    moved = router.drain(0)
+    assert moved > 0
+    done_at_drain = set(router.results())
+    assert all(router.replica_of(rid) == 1 for rid in rids
+               if rid not in done_at_drain), "incomplete request not moved"
+    while router.has_unfinished():
+        router.step()
+    res = router.results()
+    assert set(res) == set(ref)
+    for rid in ref:
+        assert list(res[rid]["tokens"]) == list(ref[rid]["tokens"])
+    stats = router.stats()
+    assert stats["migrated_requests"] == moved
+    assert stats["draining"] == [0]
+    assert stats["dense_pages_leaked"] == 0
+
+
+def test_drain_seeded_sampling_token_parity(model, donor):
+    """The acceptance contract: a drained request replays prompt +
+    generated-so-far elsewhere and its remaining SAMPLED stream reproduces
+    token-for-token (fold_in(seed, token_index) is request-local)."""
+    cfg, params = model
+    reqs = _reqs(6, sampled=True, max_tokens=8)
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    ref, _ = eng.serve(reqs)
+
+    router = _router(model, donor, 2, placement="load")
+    router.reset()
+    for r in reqs:
+        router.add_request(r)
+    for _ in range(5):
+        router.step()
+    router.drain(1)
+    while router.has_unfinished():
+        router.step()
+    res = router.results()
+    assert set(res) == set(ref)
+    for rid in ref:
+        assert list(res[rid]["tokens"]) == list(ref[rid]["tokens"]), (
+            f"rid {rid} diverged after drain/migration")
+
+
+def test_drain_guards(model, donor):
+    router = _router(model, donor, 2)
+    router.reset()
+    router.drain(1)
+    assert router.drain(1) == 0          # idempotent
+    with pytest.raises(SchedulerConfigError):
+        router.drain(0)                  # last healthy replica
+    with pytest.raises(SchedulerConfigError):
+        router.drain(7)                  # no such replica
+    router.reset()                       # drained replicas rejoin
+    assert router.healthy() == [0, 1]
+
+
+def test_engine_drain_snapshot(model, donor):
+    """Engine-level drain: pages freed, generated-so-far preserved, and the
+    snapshot completes on a DIFFERENT engine with greedy parity."""
+    cfg, params = model
+    reqs = _reqs(4)
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    ref, _ = eng.serve(reqs)
+
+    eng.reset()
+    for r in reqs:
+        eng.add_request(r)
+    for _ in range(4):
+        eng.step()
+    done = dict(eng.results())
+    moved = eng.drain()
+    assert eng._st.sched.dense_alloc.num_used == 0, "drain leaked pages"
+    assert not eng.has_unfinished()
+    assert {r.rid for r in moved} | set(done) == set(ref)
+    assert any(r.num_generated > 0 for r in moved), (
+        "expected at least one mid-flight request in the snapshot")
+
+    other = ContinuousServeEngine(cfg, params, serving=SERVING)
+    other.adopt_compiled(donor)
+    other.reset()
+    for r in moved:
+        other.add_request(r)
+    while other.has_unfinished():
+        other.step()
+    for rid, rec in other.results().items():
+        assert list(rec["tokens"]) == list(ref[rid]["tokens"])
+
+
+# ------------------------------------------------------------------- stats
+
+
+def test_stats_aggregation(model, donor):
+    router = _router(model, donor, 2, placement="load")
+    res, stats = router.serve(_reqs(6))
+    assert stats["replicas"] == 2 and stats["placement"] == "load"
+    assert len(stats["per_replica"]) == 2
+    assert (sum(p["generated_tokens"] for p in stats["per_replica"])
+            == stats["generated_tokens"] == sum(len(r["tokens"])
+                                                for r in res.values()))
+    assert stats["decode_steps_max"] == max(
+        p["decode_steps"] for p in stats["per_replica"])
+    assert stats["tokens_per_step"] == pytest.approx(
+        stats["generated_tokens"] / stats["decode_steps_max"])
+    assert stats["dense_pages_leaked"] == 0
+    assert all(eng.outstanding_tokens() == 0 for eng in router.engines)
+
+
+def test_rid_collision_rejected_across_replicas(model, donor):
+    router = _router(model, donor, 2)
+    router.reset()
+    router.add_request(ServeRequest(prompt=np.arange(1, 5), rid=3,
+                                    sampling=SamplingParams(max_tokens=4)))
+    with pytest.raises(SchedulerConfigError):
+        router.add_request(ServeRequest(prompt=np.arange(1, 5), rid=3,
+                                        sampling=SamplingParams(max_tokens=4)))
+
+
+# ----------------------------------------------- exactly-once (hypothesis)
+
+
+@hypothesis.given(
+    seed=st.integers(0, 2 ** 31 - 1),
+    ops=st.lists(st.sampled_from(["add", "add", "step", "step", "drain0",
+                                  "drain1"]), min_size=4, max_size=14),
+    placement=st.sampled_from(["rr", "load", "slo"]))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_any_interleaving_delivers_exactly_once(model, donor, seed, ops,
+                                                placement):
+    """ANY interleaving of add / step / drain / re-queue delivers every
+    request's output stream exactly once — each (rid, index) event appears
+    once, indices are gapless, exactly one finished event per rid, results
+    hold every submitted rid — and no replica leaks pages."""
+    router = _router(model, donor, 2, placement=placement)
+    router.reset()
+    rng = np.random.default_rng(seed)
+    submitted = []
+    for op in ops:
+        if op == "add":
+            sid = f"s{rng.integers(3)}" if rng.random() < 0.4 else None
+            sp = (SamplingParams(temperature=0.7, top_k=8,
+                                 seed=int(rng.integers(99)),
+                                 max_tokens=int(rng.integers(1, 5)))
+                  if rng.random() < 0.5
+                  else SamplingParams(max_tokens=int(rng.integers(1, 5))))
+            submitted.append(router.add_request(ServeRequest(
+                prompt=rng.integers(1, 200, size=int(rng.integers(2, 7))),
+                sampling=sp, session_id=sid)))
+        elif op == "step":
+            router.step()
+        else:
+            target = int(op[-1])
+            if target in router.healthy() and len(router.healthy()) > 1:
+                router.drain(target)
+    while router.has_unfinished():
+        router.step()
+
+    events = router.pending_outputs()
+    seen: dict[int, list] = {}
+    finished: dict[int, int] = {}
+    for ev in events:
+        seen.setdefault(ev.rid, []).append(ev.index)
+        if ev.finished:
+            finished[ev.rid] = finished.get(ev.rid, 0) + 1
+    res = router.results()
+    assert set(res) == set(submitted), "lost or phantom request records"
+    for rid in submitted:
+        n = len(res[rid]["tokens"])
+        assert sorted(seen.get(rid, [])) == list(range(n)), (
+            f"rid {rid}: events {sorted(seen.get(rid, []))} != 0..{n - 1}")
+        assert finished.get(rid, 0) == 1, f"rid {rid} finished twice/never"
+    for i, eng in enumerate(router.engines):
+        if eng._st is not None:
+            _check_alloc(eng)
+    agg = router.stats()
+    assert agg["dense_pages_leaked"] == 0
+    assert agg["cpq_pages_leaked"] == 0
