@@ -145,6 +145,15 @@ class ServingCfg:
     # fused paged-attention decode kernels: None defers to the engine's
     # AttentionRuntime.paged_kernels (default on); True/False overrides it
     use_paged_kernels: Optional[bool] = None
+    # prefix sharing + copy-on-write pages: admission mounts a request's
+    # longest indexed page-aligned prefix as refcount bumps on already-
+    # resident pages (zero arena writes) and chunked prefill streams only
+    # the unshared tail; a write into a still-shared page splits it first.
+    # Token-exact (greedy and seeded sampling outputs are bit-identical to
+    # sharing off); active only for chunked admissions in the dense / T1 /
+    # MLA / tiered modes — CPQ and retrieval pages read through per-slot
+    # side state and never share.
+    share_prefix: bool = False
     # base-arena compaction: every N retirements the engine applies the
     # scheduler's defrag plan (mapped pages relabel onto the lowest physical
     # ids — locality for the fused kernels' sequential page reads). 0 = off.

@@ -350,6 +350,26 @@ def defrag_caches(cfg: ModelConfig, rt: AttentionRuntime, caches,
     return {"prefix": prefix, "blocks": blocks}
 
 
+def copy_page_caches(cfg: ModelConfig, rt: AttentionRuntime, caches,
+                     src: jax.Array, dst: jax.Array):
+    """Copy physical page ``src -> dst`` in every attention layer's BASE
+    arena pools — the copy-on-write split behind prefix sharing: before a
+    request's first write into a page it still shares, the scheduler remaps
+    its block-table entry to a fresh page and this op duplicates the payload
+    (tiered arenas copy the dense arm only; non-attention layer state is
+    slot-indexed, not paged)."""
+    def one(kind, c):
+        mixer, _ = kind
+        if mixer not in ("attn", "mla"):
+            return c
+        return pgc.copy_page(c, src, dst)
+
+    prefix = [one(k, c) for k, c in zip(cfg.prefix_pattern, caches["prefix"])]
+    blocks = [jax.vmap(lambda c, kind=kind: one(kind, c))(pc)
+              for kind, pc in zip(cfg.block_pattern, caches["blocks"])]
+    return {"prefix": prefix, "blocks": blocks}
+
+
 def escalate_slot(cfg: ModelConfig, rt: AttentionRuntime, caches,
                   dense_row: jax.Array, cpq_row: jax.Array, slot: jax.Array,
                   length: jax.Array):

@@ -8,6 +8,9 @@ Modules:
   policies    — pluggable SchedulerPolicy implementations (fifo / priority /
                 slo-aware with de-escalation) and PlacementPolicy
                 implementations for the replica router (rr / load / slo)
+  prefix_index — weak content-addressed index over page-aligned token
+                prefixes (prefix sharing: admission mounts resident pages
+                by refcount bump; copy-on-write splits at divergence)
   scheduler   — host-side admission queue, slot table, watermark mechanisms
   engine      — ServeEngine (static batch) + ContinuousServeEngine
                 (add_request()/step() streaming interface; serve()/generate()
@@ -29,9 +32,10 @@ _POLICY_EXPORTS = ("SchedulerPolicy", "FifoPolicy", "PriorityPolicy",
                    "ReplicaView", "RoundRobinPlacement", "LeastLoadedPlacement",
                    "SloPressurePlacement", "make_placement")
 _ROUTER_EXPORTS = ("ReplicaRouter",)
+_PREFIX_EXPORTS = ("PrefixIndex",)
 
 __all__ = list(_ENGINE_EXPORTS + _SCHEDULER_EXPORTS + _REQUEST_EXPORTS
-               + _POLICY_EXPORTS + _ROUTER_EXPORTS)
+               + _POLICY_EXPORTS + _ROUTER_EXPORTS + _PREFIX_EXPORTS)
 
 
 def __getattr__(name):
@@ -50,4 +54,7 @@ def __getattr__(name):
     if name in _ROUTER_EXPORTS:
         from repro.serving import router
         return getattr(router, name)
+    if name in _PREFIX_EXPORTS:
+        from repro.serving import prefix_index
+        return getattr(prefix_index, name)
     raise AttributeError(name)

@@ -188,7 +188,8 @@ class _ServeState:
         B = eng.serving.num_slots
         self.gen = gen
         self.sched = Scheduler(eng.serving, eng.tiered,
-                               policy=eng.make_policy())
+                               policy=eng.make_policy(),
+                               share_prefix=eng.share_prefix)
         self.caches = M.init_paged_caches(eng.cfg, eng.rt, eng.serving,
                                           eng.tiered)
         if eng.mesh is not None:
@@ -305,6 +306,16 @@ class ContinuousServeEngine:
         self._group_routed = any(mlp == "moe" for _, mlp in cfg.layer_kinds)
         self.chunked = (bool(serving.prefill_chunk) and not self._exact_prefill
                         and not self._group_routed)
+        # prefix sharing + copy-on-write: chunked admissions only (the tail
+        # streams from a mid-context offset), and only for modes whose BASE
+        # arena payload is purely positional — dense, decomposed (T1), MLA
+        # latent, and the tiered engine's dense arm. CPQ / retrieval pages
+        # read through per-slot side state fitted to ONE request's stream,
+        # so mounting them under another slot would break bit-parity.
+        self.share_prefix = (bool(getattr(serving, "share_prefix", False))
+                             and self.chunked
+                             and rt.mode in ("dense", "decomposed"))
+        self._copy_page = jax.jit(partial(M.copy_page_caches, cfg, rt))
         # cache-bearing layer count for the traffic model
         self._n_cache_layers = sum(1 for m, _ in cfg.layer_kinds if m in ("attn", "mla"))
         self.policy = policy          # object/str override of serving.policy
@@ -596,7 +607,7 @@ class ContinuousServeEngine:
         assert other.cfg == self.cfg and other.rt == self.rt, (
             "adopt_compiled requires an identical (cfg, rt) pair")
         for name in ("_decode", "_pack", "_escalate", "_defrag",
-                     "_sample_rows"):
+                     "_copy_page", "_sample_rows"):
             setattr(self, name, getattr(other, name))
         self._prefills = other._prefills
         self._chunk_fns = other._chunk_fns
@@ -729,6 +740,36 @@ class ContinuousServeEngine:
         if req.stream is not None:
             req.stream(ev)
 
+    def _cow_guard(self, st: _ServeState, req: Request) -> bool:
+        """Copy-on-write valve before ``req``'s next cache write (tail chunk
+        or decode token): if the target block maps a SHARED page, the
+        scheduler splits it (alloc + remap + decref) and the jitted page
+        copy duplicates the payload across every attention layer's base
+        pools. Page pressure applies the growth loop's valves — preempt the
+        policy's victim, or ``req`` itself as the last resort. Returns False
+        iff ``req`` was preempted (skip its write this tick)."""
+        sched = st.sched
+        while True:
+            try:
+                plan = sched.cow_plan(req)
+            except pgc.PageAllocator.OutOfPages:
+                victim = sched.preemption_victim(exclude=req)
+                if victim is None:
+                    vslot = req.slot
+                    sched.preempt(req)
+                    self._clear_row_sampling(st, vslot)
+                    return False
+                vslot = victim.slot
+                sched.preempt(victim)
+                self._clear_row_sampling(st, vslot)
+                continue
+            if plan is not None:
+                src, dst = plan
+                st.caches = self._copy_page(st.caches,
+                                            jnp.asarray(src, jnp.int32),
+                                            jnp.asarray(dst, jnp.int32))
+            return True
+
     # ----------------------------------------------------------------- run
 
     def step(self) -> list[RequestOutput]:
@@ -814,21 +855,30 @@ class ContinuousServeEngine:
         fresh_slot = -1  # row whose prefill finished THIS tick
         if self.chunked and (pre := sched.prefilling()):
             req = pre[0]
-            tok, valid = self._prefill_chunk(req, st)
-            did_chunk = True
-            st.prefill_chunks += 1
-            st.prefill_tokens += valid
-            st.prefill_write_bytes += (valid
-                                       * (st.bpt1 if req.tier else st.bpt0)
-                                       * self._n_cache_layers)
-            st.interconnect += valid * st.concat_bpt + st.gather_bps
-            if tok is not None:
-                # the final chunk runs during THIS tick: its first token
-                # is available at the tick's end (step + 1), and the row
-                # joins the decode batch from the NEXT tick
-                self._emit_token(st, req, tok, st.step + 1)
-                if req.state == "running":
-                    fresh_slot = req.slot
+            # the first tail write of a shared-prefix admission may land
+            # inside a shared page (divergence mid-page): split it first
+            if self._cow_guard(st, req):
+                tok, valid = self._prefill_chunk(req, st)
+                did_chunk = True
+                st.prefill_chunks += 1
+                st.prefill_tokens += valid
+                st.prefill_write_bytes += (valid
+                                           * (st.bpt1 if req.tier else st.bpt0)
+                                           * self._n_cache_layers)
+                st.interconnect += valid * st.concat_bpt + st.gather_bps
+                # every page the chunk just FILLED is immutable from here on
+                # (later chunks write strictly past req.length), so register
+                # eagerly — concurrent admissions can mount a prefix that is
+                # still mid-prefill, and the entries outlive this request's
+                # retirement for as long as any borrower keeps them resident
+                sched.register_prefix(req)
+                if tok is not None:
+                    # the final chunk runs during THIS tick: its first token
+                    # is available at the tick's end (step + 1), and the row
+                    # joins the decode batch from the NEXT tick
+                    self._emit_token(st, req, tok, st.step + 1)
+                    if req.state == "running":
+                        fresh_slot = req.slot
 
         # 4) growth: map a page for every running row's next write.
         #    Out of pages: a dense grower first escalates itself to the
@@ -860,6 +910,12 @@ class ContinuousServeEngine:
                 vslot = victim.slot
                 sched.preempt(victim)
                 self._clear_row_sampling(st, vslot)
+            if req.state == "running":
+                # a decode write into a still-shared page splits it first
+                # (reachable only via adversarial schedules — tail chunks
+                # normally privatize the write frontier — but the refcount
+                # invariant must hold for ANY interleaving)
+                self._cow_guard(st, req)
 
         active = sched.active_mask()
         if fresh_slot >= 0:
@@ -923,8 +979,11 @@ class ContinuousServeEngine:
         for slot in range(B):
             if not active[slot]:
                 continue
-            self._emit_token(st, sched.slots[slot], int(toks[slot]), st.step,
-                             grow=True)
+            req = sched.slots[slot]
+            self._emit_token(st, req, int(toks[slot]), st.step, grow=True)
+            # decode just completed a page? register it — multi-turn
+            # follow-ups then mount this request's whole history
+            sched.register_prefix(req)
         return st.step_outputs
 
     def stats(self) -> dict:
@@ -941,6 +1000,7 @@ class ContinuousServeEngine:
             "cache_mode": self.rt.mode,
             "tiered": self.tiered,
             "chunked_prefill": self.chunked,
+            "prefix_sharing": self.share_prefix,
             "policy": sched.policy.name,
             "model_shards": self.model_shards,
             "arena_bytes_total": total_bytes,

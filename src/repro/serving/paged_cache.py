@@ -124,18 +124,31 @@ def _sel_rows(active: jax.Array, new, old):
 
 
 class PageAllocator:
-    """Host-side free-list over the physical pool (page 0 reserved as null).
+    """Host-side free-list over the physical pool (page 0 reserved as null),
+    with a per-page REFCOUNT: prefix sharing maps one physical page into
+    several block tables (``incref``), and the page returns to the free list
+    only when the last owner releases it. ``alloc`` hands out pages at
+    refcount 1, so refcount-oblivious callers see the old exclusive-ownership
+    semantics unchanged.
 
     The scheduler owns one per arena; alloc/free are O(n). ``OutOfPages`` is
-    the admission-control signal, not an error state."""
+    the admission-control signal, not an error state; ``DoubleFree`` IS an
+    error — releasing a page more often than it was referenced corrupts the
+    free list (it used to be an ``assert``, which vanishes under ``-O``)."""
 
     class OutOfPages(RuntimeError):
         pass
+
+    class DoubleFree(RuntimeError):
+        """A page was released more times than it was referenced (or the
+        null page was released). Raised, not asserted: a silent free-list
+        corruption here double-allocates live KV pages later."""
 
     def __init__(self, num_pages: int):
         assert num_pages >= 2, "need >= 1 allocatable page beyond the null page"
         self.num_pages = num_pages
         self._free = list(range(num_pages - 1, 0, -1))  # pop() hands out low ids first
+        self._refs = [0] * num_pages                    # [NULL_PAGE] stays 0
 
     @property
     def num_free(self) -> int:
@@ -156,17 +169,60 @@ class PageAllocator:
         if n > len(self._free):
             raise self.OutOfPages(f"want {n} pages, {len(self._free)} free")
         out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            self._refs[p] = 1
         return out
 
-    def free(self, pages) -> None:
+    def refcount(self, page: int) -> int:
+        return self._refs[int(page)]
+
+    def incref(self, page: int) -> None:
+        """Add an owner to an already-allocated page (prefix sharing: the
+        admission maps an existing physical page into another block table)."""
+        p = int(page)
+        if p == NULL_PAGE or self._refs[p] <= 0:
+            raise self.DoubleFree(f"incref of unowned page {p}")
+        self._refs[p] += 1
+
+    def free(self, pages) -> list[int]:
+        """Drop one reference per listed page. A page rejoins the free list
+        only at refcount zero; returns the pages that did (the caller
+        invalidates any prefix-index entries for exactly those)."""
+        released = []
         for p in pages:
-            assert p != NULL_PAGE, "freeing the null page"
-            assert p not in self._free, f"double free of page {p}"
-            self._free.append(int(p))
+            p = int(p)
+            if p == NULL_PAGE:
+                raise self.DoubleFree("freeing the null page")
+            if self._refs[p] <= 0:
+                raise self.DoubleFree(f"double free of page {p}")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                self._free.append(p)
+                released.append(p)
+        return released
 
     def reset_free(self, free: list[int]) -> None:
-        """Install a rebuilt free list (defrag: page ids were relabeled)."""
+        """Install a rebuilt free list (defrag: page ids were relabeled) for
+        a refcount-OBLIVIOUS owner: every used page is assumed exclusively
+        owned (refcount 1). Shared arenas must use ``relabel`` instead."""
         assert len(free) == len(self._free), (len(free), len(self._free))
+        self._free = [int(p) for p in free]
+        in_free = set(self._free)
+        self._refs = [0 if (p in in_free or p == NULL_PAGE) else 1
+                      for p in range(self.num_pages)]
+
+    def relabel(self, perm, free: list[int]) -> None:
+        """Defrag relabeling that PRESERVES refcounts: page ``perm[new]``
+        moves to id ``new`` and carries its count. Asserts the refcount
+        multiset is unchanged and the new free list is exactly the zero-
+        refcount pages (the invariant ``permute_pool`` relies on)."""
+        new_refs = [self._refs[int(old)] for old in perm]
+        if sorted(new_refs) != sorted(self._refs):
+            raise self.DoubleFree("relabel dropped or duplicated refcounts")
+        zero = {p for p in range(1, self.num_pages) if new_refs[p] == 0}
+        if set(int(p) for p in free) != zero:
+            raise self.DoubleFree("relabel free list != zero-refcount pages")
+        self._refs = new_refs
         self._free = [int(p) for p in free]
 
 
@@ -232,6 +288,27 @@ def permute_pool(cache: "PagedCache", perm: jax.Array) -> "PagedCache":
         return PagedCPQXCache(x=pcpq(cache.x),
                               k_rope=jnp.take(cache.k_rope, perm, axis=0))
     raise TypeError(type(cache))
+
+
+def copy_page(cache: "PagedCache", src: jax.Array, dst: jax.Array) -> "PagedCache":
+    """Copy one physical page's payload ``src -> dst`` in every BASE-arena
+    pool — the copy-on-write split: a writer diverging inside a shared page
+    gets a private copy before its first write. Only the positional per-token
+    pools move; per-slot side state is already private to the writer. Tiered
+    arenas copy the dense arm only (sharing is a tier-0 feature); the CPQ /
+    retrieval tiers never share pages (their dequant reads go through per-slot
+    side state fitted to one request's stream), so no copy is defined.
+    Works identically on sharded pools: the pool axis is never partitioned,
+    so the dynamic-index copy is local on every device."""
+    cp = lambda pool: pool.at[dst].set(pool[src])  # noqa: E731
+
+    if isinstance(cache, TieredPagedCache):
+        return cache._replace(dense=copy_page(cache.dense, src, dst))
+    if isinstance(cache, PagedDenseKVCache):
+        return PagedDenseKVCache(k=cp(cache.k), v=cp(cache.v))
+    if isinstance(cache, PagedXCache):
+        return PagedXCache(x=cp(cache.x), k_rope=cp(cache.k_rope))
+    raise TypeError(f"copy-on-write is undefined for {type(cache).__name__}")
 
 
 # ------------------------------------------------------------- paged containers

@@ -157,6 +157,16 @@ class FifoPolicy:
         return max(cands, key=lambda r: r.admitted_step, default=None)
 
     # -- escalation -------------------------------------------------------
+    @staticmethod
+    def _cpq_fits(sched, r) -> bool:
+        """The compressed footprint (one growth page included) must fit the
+        CPQ arena AND the per-slot block ceiling — a row sitting exactly at
+        ``max_len`` needs max_blocks+1 blocks and would overflow its alt
+        block-table row (it is one growth step from the length-cap retire)."""
+        need = pages_needed(r.length + 1, sched.cfg.page_size)
+        return (need <= sched.cfg.max_blocks_per_slot
+                and sched.cpq_alloc.can_alloc(need))
+
     def escalation_candidate(self, sched):
         """Under critical pressure: the longest running dense request whose
         compressed footprint fits the CPQ arena."""
@@ -164,8 +174,7 @@ class FifoPolicy:
             return None
         cands = [r for r in sched.running() if r.tier == 0]
         for r in sorted(cands, key=lambda r: -r.length):
-            if sched.cpq_alloc.can_alloc(
-                    pages_needed(r.length + 1, sched.cfg.page_size)):
+            if self._cpq_fits(sched, r):
                 return r
         return None
 
@@ -227,8 +236,7 @@ class PriorityPolicy(FifoPolicy):
             return None
         cands = [r for r in sched.running() if r.tier == 0]
         for r in sorted(cands, key=lambda r: (slo_of(r).priority, -r.length)):
-            if sched.cpq_alloc.can_alloc(
-                    pages_needed(r.length + 1, sched.cfg.page_size)):
+            if self._cpq_fits(sched, r):
                 return r
         return None
 

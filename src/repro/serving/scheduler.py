@@ -56,6 +56,7 @@ import numpy as np
 from repro.configs.base import ServingCfg
 from repro.serving.paged_cache import (NULL_PAGE, PageAllocator, defrag_plan,
                                        pages_needed)
+from repro.serving.prefix_index import PrefixIndex
 from repro.serving.request import SamplingParams, SloClass
 
 
@@ -94,6 +95,12 @@ class Request:
     preemptions: int = 0
     escalated: bool = False
     deescalations: int = 0
+    # prefix sharing bookkeeping: tokens mounted from the index at the LAST
+    # admission (zero arena writes; chunked prefill starts at this offset)
+    # and the high-water block count already registered into the index
+    shared_tokens: int = 0
+    indexed_blocks: int = 0
+    cow_copies: int = 0
     # set between deescalate() and the re-admission it exists for: the
     # recovery replay must land DENSE (policies pin its tier; falling back
     # to T2 would be a full-context recompute for nothing)
@@ -117,7 +124,7 @@ class Request:
 
 class Scheduler:
     def __init__(self, serving: ServingCfg, tiered: bool = False,
-                 policy=None):
+                 policy=None, share_prefix: Optional[bool] = None):
         from repro.serving.policies import FifoPolicy
 
         self.cfg = serving
@@ -127,6 +134,15 @@ class Scheduler:
             raise SchedulerConfigError("max_len < 2")
         self.dense_alloc = PageAllocator(serving.num_pages)
         self.cpq_alloc = PageAllocator(serving.escalated_pages) if tiered else None
+        # prefix sharing: a WEAK index over the BASE (dense-tier) arena only
+        # — CPQ / retrieval pages dequantize through per-slot side state
+        # fitted to one request's stream, so mounting them elsewhere would
+        # break bit-parity. The engine passes its own gate (chunked modes
+        # only); direct constructions default to ServingCfg.share_prefix.
+        if share_prefix is None:
+            share_prefix = getattr(serving, "share_prefix", False)
+        self.prefix_index = (PrefixIndex(serving.page_size)
+                             if share_prefix else None)
         self.queue: deque[Request] = deque()
         self.slots: list[Optional[Request]] = [None] * serving.num_slots
         S, M = serving.num_slots, serving.max_blocks_per_slot
@@ -136,7 +152,9 @@ class Scheduler:
         self.tiers = np.zeros((S,), np.int32)
         self.stats = {"admitted": 0, "retired": 0, "preemptions": 0,
                       "escalations": 0, "deescalations": 0,
-                      "peak_dense_pages": 0, "defrags": 0}
+                      "peak_dense_pages": 0, "defrags": 0,
+                      "prefix_hits": 0, "shared_prefix_tokens": 0,
+                      "shared_prefix_pages": 0, "cow_copies": 0}
 
     # ------------------------------------------------------------- queries
 
@@ -180,6 +198,9 @@ class Scheduler:
         if self.cpq_alloc is not None:
             out["cpq_pages_used"] = self.cpq_alloc.num_used
             out["cpq_arena_utilization"] = self.cpq_alloc.utilization
+        if self.prefix_index is not None:
+            out["prefix_index_pages"] = len(self.prefix_index)
+            out["prefix_hits"] = self.stats["prefix_hits"]
         return out
 
     def plan_defrag(self):
@@ -198,7 +219,13 @@ class Scheduler:
         for r in self.occupied():
             if r.tier == 0:
                 r.pages = [remap[int(p)] for p in r.pages]
-        self.dense_alloc.reset_free(free)
+        # shared pages move ONCE (defrag_plan dedups via its ``seen`` set)
+        # and every owner's table entry was rewritten above; the allocator
+        # carries each page's refcount to its new id and the prefix index
+        # renames its physical ids (keys are content-addressed)
+        self.dense_alloc.relabel(perm, free)
+        if self.prefix_index is not None:
+            self.prefix_index.relabel(remap)
         self.stats["defrags"] += 1
         return perm
 
@@ -234,13 +261,36 @@ class Scheduler:
             return None
         req, tier = sel
         arena = self._arena(tier)
-        need = pages_needed(len(req.context), self.cfg.page_size)
+        ctx = req.context
+        need = pages_needed(len(ctx), self.cfg.page_size)
+        # prefix sharing (base tier only): mount already-resident pages for
+        # the longest indexed prefix — refcount bumps, ZERO arena writes —
+        # and stream chunked prefill over the unshared tail only. The match
+        # is capped at len(ctx)-1 so the first token's logits always come
+        # from a computed tail chunk (token-exactness).
+        shared_pages: list[int] = []
+        shared_tokens = 0
+        if tier == 0 and self.prefix_index is not None:
+            # heal first: a retirement may have just forgotten entries whose
+            # content is still resident in OTHER rows' pages (their earlier
+            # registrations deduped against the retiree's). Re-registering
+            # live rows is watermark-cheap and closes the one-tick window
+            # between a registrant's release and the next chunk pump.
+            for live in self.slots:
+                if live is not None:
+                    self.register_prefix(live)
+            shared_pages, shared_tokens = self.prefix_index.match(ctx)
         self.queue.remove(req)
         req.recovering = False
-        req.pages = arena.alloc(need)
+        fresh = arena.alloc(need - len(shared_pages))
+        for p in shared_pages:
+            arena.incref(p)
+        req.pages = [int(p) for p in shared_pages] + fresh
         req.state, req.slot, req.tier = "prefilling", slot, tier
-        req.prefill_target = len(req.context)
-        req.length = 0  # grows as chunks land (finish_prefill closes it out)
+        req.prefill_target = len(ctx)
+        req.length = shared_tokens  # prefix pre-mounted; chunks grow the tail
+        req.shared_tokens = shared_tokens
+        req.indexed_blocks = 0
         if req.admitted_step < 0:
             req.admitted_step = step
         self.slots[slot] = req
@@ -249,8 +299,12 @@ class Scheduler:
         tables[slot, :need] = req.pages
         if self.tiered:
             self._tables(1 - tier)[slot, :] = NULL_PAGE
-        self.lengths[slot] = 0
+        self.lengths[slot] = shared_tokens
         self.tiers[slot] = tier
+        if shared_tokens:
+            self.stats["prefix_hits"] += 1
+            self.stats["shared_prefix_tokens"] += shared_tokens
+            self.stats["shared_prefix_pages"] += len(shared_pages)
         self.stats["admitted"] += 1
         self.stats["peak_dense_pages"] = max(self.stats["peak_dense_pages"],
                                              self.dense_alloc.num_used)
@@ -290,11 +344,75 @@ class Scheduler:
                                              self.dense_alloc.num_used)
         return True
 
+    # ------------------------------------------------ prefix sharing / COW
+
+    def _free_pages(self, tier: int, pages) -> None:
+        """The ONE funnel every page release goes through: the allocator
+        decrefs, and pages whose refcount hit zero leave the prefix index
+        (free-list membership <=> refcount 0 <=> not indexed)."""
+        released = self._arena(tier).free(pages)
+        if tier == 0 and self.prefix_index is not None:
+            for p in released:
+                self.prefix_index.forget(p)
+
+    def cow_plan(self, req: Request) -> Optional[tuple[int, int]]:
+        """Copy-on-write guard, called BEFORE any write into the block that
+        holds position ``req.length`` (the next chunk/decode write target).
+
+        A shared mapping there (refcount > 1) splits: allocate a private
+        page, remap this owner's block-table entry, decref the shared page
+        — the caller must then run the jitted page copy ``src -> dst``
+        before writing. A lone-owner mapping that is still REGISTERED is
+        about to stop matching its key (the write diverges mid-page), so it
+        just leaves the index in place. Raises ``PageAllocator.OutOfPages``
+        when the split cannot get a page (caller applies the same pressure
+        valves as page growth). Returns (src, dst) or None."""
+        if req.tier != 0 or req.slot < 0:
+            return None
+        blk = req.length // self.cfg.page_size
+        if blk >= self.cfg.max_blocks_per_slot:
+            return None  # growth's length-cap path owns this case
+        page = int(self.block_tables[req.slot, blk])
+        if page == NULL_PAGE:
+            return None
+        if self.dense_alloc.refcount(page) <= 1:
+            # private already — but a registered page's content is about to
+            # diverge from its key past position ``length``: unregister
+            if self.prefix_index is not None:
+                self.prefix_index.forget(page)
+            return None
+        dst = self.dense_alloc.alloc(1)[0]
+        self.block_tables[req.slot, blk] = dst
+        req.pages[req.pages.index(page)] = dst
+        self._free_pages(0, [page])  # decref; other owners keep the original
+        req.cow_copies += 1
+        self.stats["cow_copies"] += 1
+        self.stats["peak_dense_pages"] = max(self.stats["peak_dense_pages"],
+                                             self.dense_alloc.num_used)
+        return page, dst
+
+    def register_prefix(self, req: Request) -> None:
+        """Register every newly COMPLETED page of ``req``'s context into the
+        prefix index (full pages are immutable, hence safe to share). Called
+        after prefill finishes and whenever decode fills a page — so a
+        multi-turn follow-up sharing this request's whole history mounts it
+        from the index. Registration never takes a reference: the index is
+        weak, and entries die with the page (``_free_pages``)."""
+        if (self.prefix_index is None or req.tier != 0 or req.slot < 0
+                or req.state not in ("prefilling", "running")):
+            return
+        ctx = req.context
+        full = min(req.length, len(ctx)) // self.cfg.page_size
+        if full > req.indexed_blocks:
+            req.indexed_blocks = self.prefix_index.insert(
+                ctx, req.pages, req.indexed_blocks, full)
+
     # ---------------------------------------------------- retire / preempt
 
     def _release(self, req: Request) -> None:
-        self._arena(req.tier).free(req.pages)
+        self._free_pages(req.tier, req.pages)
         req.pages = []
+        req.indexed_blocks = 0
         slot = req.slot
         self.block_tables[slot, :] = NULL_PAGE
         if self.tiered:
@@ -369,8 +487,11 @@ class Scheduler:
         dense_row = self.block_tables[slot].copy()
         need = pages_needed(req.length + 1, self.cfg.page_size)
         new_pages = self.cpq_alloc.alloc(need)
-        self.dense_alloc.free(req.pages)
+        # shared dense pages just decref (another owner may keep them live);
+        # the re-compressed CPQ copy is private to this slot either way
+        self._free_pages(0, req.pages)
         req.pages = new_pages
+        req.indexed_blocks = 0
         req.tier, req.escalated = 1, True
         self.tiers[slot] = 1
         self.block_tables[slot, :] = NULL_PAGE

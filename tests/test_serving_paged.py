@@ -30,9 +30,9 @@ def test_page_allocator_invariants():
         a.alloc(6)
     a.free(p1[:2])
     assert a.num_free == 7
-    with pytest.raises(AssertionError):  # double free
+    with pytest.raises(pgc.PageAllocator.DoubleFree):  # double free RAISES
         a.free([p1[0]])
-    with pytest.raises(AssertionError):  # null page is never owned
+    with pytest.raises(pgc.PageAllocator.DoubleFree):  # null page never owned
         a.free([pgc.NULL_PAGE])
 
 
