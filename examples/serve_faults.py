@@ -1,0 +1,100 @@
+"""Fault-tolerant serving demo: a deterministic crash window on one of two
+router replicas — the HealthMonitor counts the step() faults, auto-drains
+the replica (its in-flight requests migrate by recompute replay), probes it
+on exponential backoff, and re-admits it once the window passes. Token
+streams are bit-identical to a fault-free run of the same trace. A second
+pass shows deadline-aware shedding: with ``deadline_scale`` set, a request
+whose SLO-derived tick budget blows finishes with reason ``timeout``
+instead of occupying a slot forever.
+
+  PYTHONPATH=src python examples/serve_faults.py
+"""
+import numpy as np
+
+import jax
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.models import model as M
+from repro.serving import (BATCH, INTERACTIVE, FaultEvent, FaultPlan,
+                           ReplicaRouter, SamplingParams, ServeRequest)
+from repro.serving.paged_cache import pages_needed
+
+
+def make_serving(**kw):
+    max_len = 48
+    return ServingCfg(num_slots=2, page_size=8,
+                      num_pages=2 * pages_needed(max_len, 8) + 1,
+                      max_blocks_per_slot=pages_needed(max_len, 8),
+                      prefill_bucket=8, prefill_chunk=8, **kw)
+
+
+def trace(rng, n=5):
+    return [ServeRequest(
+        rid=i, prompt=rng.integers(1, 1000, size=int(rng.integers(4, 10))),
+        sampling=(SamplingParams(temperature=0.8, top_k=20, seed=7 + i,
+                                 max_tokens=8) if i % 2
+                  else SamplingParams(max_tokens=8)),
+        slo=INTERACTIVE if i % 2 else BATCH) for i in range(n)]
+
+
+def run(router, reqs):
+    router.reset()
+    for r in reqs:
+        router.add_request(r)
+    ticks = 0
+    while router.has_unfinished():
+        router.step()
+        ticks += 1
+    return router.results(), router.stats(), ticks
+
+
+def main():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    # ---- fault-free reference -------------------------------------------
+    serving = make_serving(probe_interval=2, probe_failures=2,
+                           probe_backoff=2, auto_drain=True)
+    router = ReplicaRouter(cfg, params, num_replicas=2, serving=serving,
+                           placement="load")
+    ref, _, ref_ticks = run(router, trace(np.random.default_rng(0)))
+    print(f"[ref] fault-free: {len(ref)} requests in {ref_ticks} ticks")
+
+    # ---- same trace, crash window on replica 0 --------------------------
+    # two step() faults in a row hit probe_failures=2: the monitor drains
+    # replica 0 (snapshots migrate to replica 1), probes it on backoff, and
+    # re-admits it once the window closes
+    plan = FaultPlan((FaultEvent(tick=3, kind="crash", duration=4),))
+    faulty = ReplicaRouter(cfg, params, num_replicas=2, serving=serving,
+                           placement="load", fault_plans=[plan, None])
+    for eng in faulty.engines:
+        eng.adopt_compiled(router.engines[0])
+    res, stats, ticks = run(faulty, trace(np.random.default_rng(0)))
+    print(f"[crash] replica 0 down ticks [3,7): auto_drains="
+          f"{stats['auto_drains']} recoveries={stats['recoveries']} "
+          f"migrated={stats['migrated_requests']} "
+          f"(+{ticks - ref_ticks} ticks vs fault-free)")
+    for p in stats["per_replica"]:
+        print(f"  replica {p['replica']}: health={p['health']} "
+              f"probe_failures={p['probe_failures']}")
+    match = all(list(res[r]["tokens"]) == list(ref[r]["tokens"]) for r in ref)
+    print(f"[parity] greedy AND seeded streams bit-identical across the "
+          f"crash: {match}")
+    assert match and stats["dense_pages_leaked"] == 0
+
+    # ---- deadline-aware shedding ----------------------------------------
+    # scale * (ttft_target + max_tokens * itl_target) ticks of budget; the
+    # INTERACTIVE class's tight targets blow first and finish as 'timeout'
+    tight = ReplicaRouter(cfg, params, num_replicas=2,
+                          serving=make_serving(deadline_scale=0.25),
+                          placement="load")
+    for eng in tight.engines:
+        eng.adopt_compiled(router.engines[0])
+    res, stats, _ = run(tight, trace(np.random.default_rng(0)))
+    reasons = {r: res[r]["finish_reason"] for r in sorted(res)}
+    print(f"[deadlines] scale=0.25 finish reasons: {reasons} "
+          f"(timeouts={stats['timeouts']})")
+
+
+if __name__ == "__main__":
+    main()

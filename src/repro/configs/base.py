@@ -160,6 +160,38 @@ class ServingCfg:
     # Logical contents are invariant (property-tested, incl. sharded arenas);
     # the count surfaces as the ``defrags`` serve stat.
     defrag_every: int = 0
+    # ---- fault tolerance (serving/health.py + router) -------------------
+    # health-probe cadence in router ticks (HealthMonitor; 0 disables
+    # probing entirely — the router then only reacts to step() faults)
+    probe_interval: int = 4
+    # consecutive failed probes (liveness / progress / arena pressure)
+    # before the monitor auto-drains a replica
+    probe_failures: int = 3
+    # initial re-probe backoff (router ticks) after an auto-drain; doubles
+    # per failed recovery probe up to 8x (bounded so a recovered replica
+    # re-admits within a handful of probes)
+    probe_backoff: int = 4
+    # dense free-page fraction at/below which a replica WITH queued work
+    # counts as arena-exhausted for probing purposes (negative disables the
+    # pressure check; injected exhaust faults also set an explicit flag)
+    probe_exhaust_frac: float = 0.0
+    # auto-drain: let the HealthMonitor drain an unhealthy replica through
+    # the normal engine.drain() snapshot path (and re-admit it after
+    # recovery probes succeed). Off by default: drains are caller-driven
+    # exactly as before unless opted in.
+    auto_drain: bool = False
+    # deadline-aware load shedding: scale applied to SloClass-derived
+    # per-request budgets (deadline = arrival + scale * (ttft_target +
+    # max_tokens * itl_target), enforced at tick boundaries with a counted
+    # ``timeout`` finish reason). 0 = deadlines off; explicit
+    # SamplingParams.deadline budgets are honored regardless.
+    deadline_scale: float = 0.0
+    # router-level admission backpressure: parked-request backlog capacity.
+    # When every replica is draining or saturated, new work PARKS in the
+    # router backlog instead of raising; beyond this many parked requests,
+    # deadline-free batch-class arrivals are SHED (counted, never raised).
+    # 0 = unbounded parking, never shed.
+    max_backlog: int = 0
 
     def __post_init__(self):
         assert self.num_pages >= 2 and self.escalated_pages >= 2
@@ -170,6 +202,12 @@ class ServingCfg:
         assert self.prefill_bucket >= 1
         assert self.prefill_chunk >= 0
         assert self.defrag_every >= 0
+        assert self.probe_interval >= 0
+        assert self.probe_failures >= 1
+        assert self.probe_backoff >= 1
+        assert self.probe_exhaust_frac <= 1.0
+        assert self.deadline_scale >= 0.0
+        assert self.max_backlog >= 0
         if self.prefill_chunk:
             assert self.prefill_chunk % self.page_size == 0, (
                 "prefill_chunk must be page-aligned "

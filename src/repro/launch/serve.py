@@ -65,6 +65,29 @@ def main(argv=None):
                          "classes to the freest arena, deadline-free batch "
                          "balanced by outstanding tokens (only with "
                          "--replicas > 1)")
+    ap.add_argument("--probe-interval", type=int, default=4,
+                    help="router health-probe period in ticks (0 disables "
+                         "periodic probing; step() faults still count); "
+                         "liveness / arena-pressure / progress checks "
+                         "(serving/health.py; with --replicas > 1)")
+    ap.add_argument("--auto-drain", action="store_true",
+                    help="drain a replica that fails consecutive health "
+                         "probes (or crashes in step()) and re-admit it "
+                         "after a backoff recovery probe succeeds; its "
+                         "in-flight work migrates by recompute replay "
+                         "(requires --replicas > 1)")
+    ap.add_argument("--deadline-scale", type=float, default=0.0,
+                    help="derive per-request tick deadlines from the SLO "
+                         "class targets (deadline = scale * (ttft_target + "
+                         "max_tokens * itl_target)); blown budgets finish "
+                         "with reason 'timeout' instead of occupying slots; "
+                         "0 = off (requires --continuous)")
+    ap.add_argument("--inject-faults", type=int, default=None, metavar="SEED",
+                    help="wrap every replica in a deterministic seed-driven "
+                         "fault plan (crash / stall / exhaust windows; "
+                         "serving/faults.py) to exercise the auto-drain and "
+                         "recovery machinery (requires --replicas > 1; "
+                         "implies --auto-drain)")
     ap.add_argument("--mesh", default=None, metavar="dp,mp",
                     help="serve over a device mesh: dp-way engine replication"
                          " x mp-way model sharding of the paged arenas "
@@ -93,6 +116,17 @@ def main(argv=None):
     if args.replicas > 1 and not args.continuous:
         ap.error("--replicas requires --continuous (the router fans out "
                  "over continuous-batching engines)")
+    if args.deadline_scale and not args.continuous:
+        ap.error("--deadline-scale requires --continuous (tick deadlines "
+                 "are enforced by the continuous scheduler)")
+    if args.deadline_scale < 0:
+        ap.error("--deadline-scale must be >= 0")
+    if args.auto_drain and args.replicas < 2:
+        ap.error("--auto-drain requires --replicas > 1 (the HealthMonitor "
+                 "lives in the router)")
+    if args.inject_faults is not None and args.replicas < 2:
+        ap.error("--inject-faults requires --replicas > 1 (faults exercise "
+                 "the router's drain/recovery machinery)")
     mesh = None
     if args.mesh:
         if not args.continuous:
@@ -111,16 +145,33 @@ def main(argv=None):
             num_slots=args.batch, page_size=16,
             num_pages=args.batch * pages_needed(n_max, 16) + 1,
             max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16,
-            prefill_chunk=args.prefill_chunk, policy=args.policy)
+            prefill_chunk=args.prefill_chunk, policy=args.policy,
+            probe_interval=args.probe_interval,
+            auto_drain=args.auto_drain or args.inject_faults is not None,
+            deadline_scale=args.deadline_scale)
         if args.replicas > 1:
             from repro.serving import ReplicaRouter
 
+            plans = None
+            if args.inject_faults is not None:
+                from repro.serving.faults import FaultPlan
+
+                plans = [FaultPlan.random(args.inject_faults + i,
+                                          horizon=4 * args.new, n_events=2)
+                         for i in range(args.replicas)]
             eng = ReplicaRouter(cfg, params, num_replicas=args.replicas,
                                 serving=serving, placement=args.placement,
-                                mesh=mesh)
+                                mesh=mesh, fault_plans=plans)
             print(f"[serve] router: {args.replicas} replicas, "
                   f"placement={args.placement} "
                   f"({args.replicas * args.batch} slots aggregate)")
+            if plans is not None:
+                events = "; ".join(
+                    f"r{i}:" + ",".join(f"{e.kind}@{e.tick}x{e.duration}"
+                                        for e in p.events)
+                    for i, p in enumerate(plans))
+                print(f"[serve] fault injection seed={args.inject_faults}: "
+                      f"{events} (auto-drain on)")
         else:
             eng = ContinuousServeEngine(cfg, params, serving=serving,
                                         mesh=mesh)

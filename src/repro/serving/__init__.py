@@ -16,7 +16,13 @@ Modules:
                 (add_request()/step() streaming interface; serve()/generate()
                 batch wrappers)
   router      — ReplicaRouter: data-parallel fan-out over N engine replicas
-                with SLO-aware placement, session affinity, and drain
+                with SLO-aware placement, session affinity, drain,
+                rebalance (migrate without drain), and a parked backlog
+  faults      — deterministic seed-driven fault injection (FaultPlan /
+                FaultyReplica: crash / stall / exhaust on schedule)
+  health      — HealthMonitor: liveness/progress/pressure probes with
+                consecutive-failure thresholds, auto-drain, and
+                exponential-backoff recovery re-admission
 
 Engine symbols are re-exported lazily (PEP 562) so importing
 ``repro.serving.paged_cache`` from the model stack does not recurse through
@@ -33,9 +39,12 @@ _POLICY_EXPORTS = ("SchedulerPolicy", "FifoPolicy", "PriorityPolicy",
                    "SloPressurePlacement", "make_placement")
 _ROUTER_EXPORTS = ("ReplicaRouter",)
 _PREFIX_EXPORTS = ("PrefixIndex",)
+_FAULT_EXPORTS = ("FaultEvent", "FaultPlan", "FaultyReplica", "ReplicaFault")
+_HEALTH_EXPORTS = ("HealthMonitor", "ReplicaHealth")
 
 __all__ = list(_ENGINE_EXPORTS + _SCHEDULER_EXPORTS + _REQUEST_EXPORTS
-               + _POLICY_EXPORTS + _ROUTER_EXPORTS + _PREFIX_EXPORTS)
+               + _POLICY_EXPORTS + _ROUTER_EXPORTS + _PREFIX_EXPORTS
+               + _FAULT_EXPORTS + _HEALTH_EXPORTS)
 
 
 def __getattr__(name):
@@ -57,4 +66,10 @@ def __getattr__(name):
     if name in _PREFIX_EXPORTS:
         from repro.serving import prefix_index
         return getattr(prefix_index, name)
+    if name in _FAULT_EXPORTS:
+        from repro.serving import faults
+        return getattr(faults, name)
+    if name in _HEALTH_EXPORTS:
+        from repro.serving import health
+        return getattr(health, name)
     raise AttributeError(name)

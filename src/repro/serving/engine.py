@@ -214,6 +214,7 @@ class _ServeState:
         self.util_peak = self.util_sum = 0.0
         self.util_n = 0
         self.defrag_mark = 0          # retirements at the last compaction
+        self.has_deadlines = False    # any finite request deadline admitted
         # per-decode-tick utilization traces (active rows / arena fill) —
         # the idle-vs-active series bench_e2e_energy's device model charges
         self.trace_active: list[int] = []
@@ -575,8 +576,28 @@ class ContinuousServeEngine:
                 f"request id {req.rid} already in use this session "
                 "(omit ServeRequest.rid to auto-assign)")
         st.next_rid = max(st.next_rid, req.rid + 1)
+        self._assign_deadlines(req, st)
         st.sched.submit(req)
         return req.rid
+
+    def _assign_deadlines(self, req: Request, st: _ServeState) -> None:
+        """Derive the request's absolute timeout ticks (policies
+        .derive_deadlines): an explicit ``SamplingParams.deadline`` budget,
+        or — with ``ServingCfg.deadline_scale > 0`` — the SLO class's
+        scaled TTFT/total targets. Deterministic in the request alone, so a
+        migrated snapshot re-derives identical deadlines."""
+        from repro.serving.policies import derive_deadlines, slo_of
+
+        scale = self.serving.deadline_scale
+        sp = req.sampling
+        if sp is None:
+            if scale <= 0:
+                return  # legacy request, deadlines off: nothing to derive
+            sp = SamplingParams(max_tokens=req.max_new_tokens)
+        req.ttft_deadline, req.deadline = derive_deadlines(
+            sp, slo_of(req), req.arrival, scale)
+        if np.isfinite(req.deadline) or np.isfinite(req.ttft_deadline):
+            st.has_deadlines = True
 
     def has_unfinished(self) -> bool:
         """Whether the session still holds queued or in-flight requests."""
@@ -618,6 +639,58 @@ class ContinuousServeEngine:
         policies read before assigning a request to this engine."""
         sched = self._ensure_state().sched
         return {**sched.arena_stats(), "free_frac": sched.free_frac()}
+
+    def health(self) -> dict:
+        """Cheap liveness/progress/pressure probe surface for the router's
+        ``HealthMonitor``: no device work, pure host bookkeeping.
+        ``progress`` is a counter that moves whenever the engine does
+        anything (tick clock + admissions + retirements) — two consecutive
+        probes seeing the same value on an engine that HAS work is a stall.
+        ``exhausted`` is always False here; fault injection
+        (``FaultyReplica``) overrides it."""
+        st = self._st
+        if st is None:
+            return {"alive": True, "has_work": False, "queued": 0,
+                    "progress": 0, "free_frac": 1.0, "exhausted": False}
+        sched = st.sched
+        return {"alive": True,
+                "has_work": sched.has_work(),
+                "queued": len(sched.queue),
+                "progress": (st.step + sched.stats["admitted"]
+                             + sched.stats["retired"]),
+                "free_frac": sched.free_frac(),
+                "exhausted": False}
+
+    def queued_requests(self) -> list[Request]:
+        """The admission queue, in order (read-only view for the router)."""
+        st = self._st
+        return list(st.sched.queue) if st is not None else []
+
+    def drain_request(self, rid: int) -> Optional[Request]:
+        """Snapshot ONE incomplete request for replay elsewhere and free its
+        pages — the single-request form of ``drain()`` (the router's
+        ``rebalance`` migrate-without-drain primitive rides on it). A
+        resident row (decoding or mid-prefill) leaves through the same
+        recompute-preemption path full drain uses; a queued request is
+        simply removed. Returns the Request record (context = prompt +
+        generated so far, pinned SamplingParams intact) or None when the
+        rid is not incomplete here."""
+        st = self._st
+        if st is None:
+            return None
+        sched = st.sched
+        for req in sched.occupied():
+            if req.rid == rid:
+                slot = req.slot
+                sched.preempt(req)          # pages freed, state -> queued
+                self._clear_row_sampling(st, slot)
+                sched.queue.remove(req)     # preempt requeued at the front
+                return req
+        for req in list(sched.queue):
+            if req.rid == rid:
+                sched.queue.remove(req)
+                return req
+        return None
 
     def outstanding_tokens(self) -> int:
         """Work still owed across queued and resident requests: prefill
@@ -740,6 +813,45 @@ class ContinuousServeEngine:
         if req.stream is not None:
             req.stream(ev)
 
+    def _emit_finish(self, st: _ServeState, req: Request, reason: str) -> None:
+        """Finish-only event (no token payload): ``token == -1`` with
+        ``index`` at the stream length — timeout/shed retirements, where the
+        gapless token stream simply ends early."""
+        ev = RequestOutput(rid=req.rid, token=-1, index=req.num_generated,
+                           step=st.step, finished=True, finish_reason=reason)
+        st.step_outputs.append(ev)
+        st.outputs.append(ev)
+        if req.stream is not None:
+            req.stream(ev)
+
+    def _deadline_blown(self, req: Request, now: int) -> bool:
+        return (now >= req.deadline
+                or (req.first_token_step < 0 and now >= req.ttft_deadline))
+
+    def _expire_deadlines(self, st: _ServeState) -> None:
+        """Tick-boundary deadline enforcement: any queued or resident
+        request past its absolute deadline (or TTFT deadline with no first
+        token yet) retires with finish_reason ``timeout`` — pages freed
+        immediately, a finish-only event emitted, the ``timeouts`` stat
+        bumped. Skipped entirely when no admitted request carries a finite
+        deadline (the default: zero overhead)."""
+        if not st.has_deadlines:
+            return
+        sched = st.sched
+        now = st.step
+        for req in list(sched.occupied()):
+            if self._deadline_blown(req, now):
+                self._finish(st, req, "timeout")
+                sched.stats["timeouts"] += 1
+                self._emit_finish(st, req, "timeout")
+        for req in [r for r in sched.queue if self._deadline_blown(r, now)]:
+            sched.queue.remove(req)
+            req.state, req.done_step = "done", now
+            req.finish_reason = "timeout"
+            st.results[req.rid] = self._result_of(req)
+            sched.stats["timeouts"] += 1
+            self._emit_finish(st, req, "timeout")
+
     def _cow_guard(self, st: _ServeState, req: Request) -> bool:
         """Copy-on-write valve before ``req``'s next cache write (tail chunk
         or decode token): if the target block maps a SHARED page, the
@@ -793,6 +905,12 @@ class ContinuousServeEngine:
         if not sched.has_work():
             return []
         B = self.serving.num_slots
+
+        # -1) deadline-aware shedding: blown budgets retire BEFORE this
+        #     tick's admissions, so their freed slots/pages refill now
+        self._expire_deadlines(st)
+        if not sched.has_work():
+            return st.step_outputs
 
         # 0) periodic base-arena compaction (defrag_every retirements):
         #    the scheduler relabels mapped pages onto the lowest ids and

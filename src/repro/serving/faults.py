@@ -1,0 +1,162 @@
+"""Deterministic fault injection for the serving stack.
+
+Failure handling is only trustworthy if failures are REPRODUCIBLE: a chaos
+test that crashes a replica at a random wall-clock moment cannot be
+replayed, bisected, or asserted token-exact against a fault-free run. This
+module makes faults part of the deterministic simulation instead:
+
+  ``FaultEvent``     one scheduled fault: at logical clock tick ``tick``
+                     (the wrapper's own event clock, see below), behave as
+                     ``kind`` for ``duration`` consecutive clock advances.
+  ``FaultPlan``      an immutable schedule of events. ``FaultPlan.random``
+                     derives one from a seed — the chaos property feeds
+                     hypothesis-drawn seeds through it, so every failing
+                     schedule is a single integer to replay.
+  ``FaultyReplica``  a transparent wrapper around a ``ContinuousServeEngine``
+                     that consults the plan on every ``step()`` / ``health()``
+                     call and misbehaves on schedule. Everything else
+                     forwards to the wrapped engine untouched.
+
+Fault kinds:
+
+  ``crash``    ``step()``/``health()`` raise ``ReplicaFault`` BEFORE touching
+               the inner engine — its state stays exactly as the previous
+               tick left it, so a subsequent ``drain()`` snapshot is
+               token-exact (fail-stop, not fail-corrupt).
+  ``stall``    ``step()`` returns no outputs and performs no work (a wedged
+               device: alive, unresponsive). ``health()`` succeeds but shows
+               no progress, which trips the monitor's progress probe.
+  ``exhaust``  the replica reports a full arena (``free_frac`` 0.0 and an
+               explicit ``exhausted`` flag) while stepping normally —
+               models allocator-pressure pathologies the watermark machinery
+               cannot clear.
+
+The wrapper clock advances once per ``step()`` call AND once per ``health()``
+probe. A drained replica is no longer stepped, but the HealthMonitor keeps
+probing it on backoff — those probes advance the clock through the fault
+window, so a crashed replica RECOVERS (and re-admits) a deterministic number
+of probes later. Fault windows are logical events, not wall time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+FAULT_KINDS = ("crash", "stall", "exhaust")
+
+
+class ReplicaFault(RuntimeError):
+    """Raised by a ``FaultyReplica`` during an active ``crash`` window.
+
+    The router catches it per-replica (``HealthMonitor.note_fault``); it
+    escaping a test means some caller stepped a replica outside the
+    router's supervision."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault window: [tick, tick + duration) on the wrapper's
+    event clock."""
+
+    tick: int
+    kind: str
+    duration: int = 1
+
+    def __post_init__(self):
+        assert self.kind in FAULT_KINDS, self.kind
+        assert self.tick >= 0 and self.duration >= 1
+
+    def active_at(self, clock: int) -> bool:
+        return self.tick <= clock < self.tick + self.duration
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable fault schedule. Overlapping windows resolve to the
+    EARLIEST event (ties by position in ``events``) — deterministic either
+    way. An empty plan is a no-op wrapper (useful as the control arm)."""
+
+    events: tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+
+    def active_at(self, clock: int):
+        """The governing FaultEvent at ``clock``, or None."""
+        live = [e for e in self.events if e.active_at(clock)]
+        return min(live, key=lambda e: e.tick) if live else None
+
+    def horizon(self) -> int:
+        """First clock tick past every window (0 for the empty plan)."""
+        return max((e.tick + e.duration for e in self.events), default=0)
+
+    @classmethod
+    def random(cls, seed: int, horizon: int = 32, n_events: int = 2,
+               kinds=FAULT_KINDS, max_duration: int = 3) -> "FaultPlan":
+        """Seed-derived schedule: ``n_events`` faults at ticks in
+        [1, horizon) with durations in [1, max_duration]. Same seed, same
+        plan — the chaos suite's whole replay story."""
+        rng = np.random.default_rng(seed)
+        kinds = tuple(kinds)
+        events = []
+        for _ in range(n_events):
+            events.append(FaultEvent(
+                tick=int(rng.integers(1, max(horizon, 2))),
+                kind=kinds[int(rng.integers(len(kinds)))],
+                duration=int(rng.integers(1, max_duration + 1))))
+        return cls(tuple(sorted(events, key=lambda e: (e.tick, e.kind))))
+
+
+class FaultyReplica:
+    """Transparent fault-injecting wrapper around a serve engine.
+
+    Drop-in for the router: every attribute not intercepted here forwards
+    to the wrapped engine, so ``adopt_compiled``, ``drain``, ``stats`` etc.
+    behave identically. Only ``step`` / ``health`` / ``arena_stats``
+    consult the plan. ``faults_injected`` counts fired windows by kind."""
+
+    def __init__(self, engine, plan: FaultPlan):
+        self.engine = engine
+        self.plan = plan
+        self.clock = 0
+        self.faults_injected = {k: 0 for k in FAULT_KINDS}
+
+    def __getattr__(self, name):
+        return getattr(self.engine, name)
+
+    def _advance(self):
+        ev = self.plan.active_at(self.clock)
+        self.clock += 1
+        if ev is not None:
+            self.faults_injected[ev.kind] += 1
+        return ev
+
+    # -- intercepted surface ----------------------------------------------
+
+    def step(self):
+        ev = self._advance()
+        if ev is not None and ev.kind == "crash":
+            # raise BEFORE the inner step: fail-stop, state untouched
+            raise ReplicaFault(
+                f"injected crash (tick {self.clock - 1}, event @{ev.tick})")
+        if ev is not None and ev.kind == "stall":
+            return []  # wedged: alive, no work done, no outputs
+        return self.engine.step()
+
+    def health(self) -> dict:
+        ev = self._advance()
+        if ev is not None and ev.kind == "crash":
+            raise ReplicaFault(
+                f"injected crash on probe (tick {self.clock - 1})")
+        h = self.engine.health()
+        if ev is not None and ev.kind == "exhaust":
+            h = dict(h, free_frac=0.0, exhausted=True)
+        return h
+
+    def arena_stats(self) -> dict:
+        ev = self.plan.active_at(self.clock)  # peek: stats don't advance
+        st = self.engine.arena_stats()
+        if ev is not None and ev.kind == "exhaust":
+            st = dict(st, free_frac=0.0)
+        return st

@@ -61,6 +61,35 @@ def slo_of(req: "Request") -> SloClass:
     return req.slo if req.slo is not None else STANDARD
 
 
+def derive_deadlines(sampling, slo: SloClass, arrival: float,
+                     scale: float) -> tuple[float, float]:
+    """(ttft_deadline, deadline) — ABSOLUTE engine ticks, ``math.inf`` = none.
+
+    An explicit ``SamplingParams.deadline`` budget always wins for the total
+    deadline (``arrival + budget``). Otherwise, with ``scale > 0`` and finite
+    SloClass targets, the class targets become enforced budgets:
+
+        ttft_deadline = arrival + scale * ttft_target
+        deadline      = arrival + scale * (ttft_target
+                                           + max_tokens * itl_target)
+
+    ``scale`` is the slack multiplier (``ServingCfg.deadline_scale``): 1.0
+    enforces the bare SLO targets, larger values give proportional headroom,
+    0 disables class-derived deadlines entirely. Infinite targets (e.g. the
+    BATCH class) never derive a deadline — batch work is shed by admission
+    backpressure, not timers."""
+    ttft_deadline = deadline = math.inf
+    if math.isfinite(sampling.deadline):
+        deadline = arrival + sampling.deadline
+    elif scale > 0 and math.isfinite(slo.ttft_target) \
+            and math.isfinite(slo.itl_target):
+        deadline = arrival + scale * (slo.ttft_target
+                                      + sampling.max_tokens * slo.itl_target)
+    if scale > 0 and math.isfinite(slo.ttft_target):
+        ttft_deadline = arrival + scale * slo.ttft_target
+    return ttft_deadline, deadline
+
+
 @runtime_checkable
 class SchedulerPolicy(Protocol):
     """Decision interface consulted by ``Scheduler``. Implementations must
@@ -303,11 +332,13 @@ class ReplicaView:
     never offered). ``outstanding_tokens`` is the replica's owed work
     (``engine.outstanding_tokens()``: unprefilled context + undelivered
     generation budget); ``free_frac`` its dense free-page fraction
-    (``engine.arena_stats()``)."""
+    (``engine.arena_stats()``); ``queued`` the number of requests waiting
+    in its admission queue (saturation signal for backpressure)."""
 
     index: int
     outstanding_tokens: int
     free_frac: float
+    queued: int = 0
 
 
 @runtime_checkable

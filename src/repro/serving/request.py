@@ -58,11 +58,17 @@ class SamplingParams:
     max_tokens: int = 32
     stop_token_ids: tuple[int, ...] = ()
     seed: int = 0
+    # explicit total-latency budget in engine ticks RELATIVE to arrival
+    # (math.inf = none). At a tick boundary where the budget is blown the
+    # request retires with finish_reason "timeout" (pages freed, counted in
+    # the ``timeouts`` stat). Overrides any SloClass-derived budget.
+    deadline: float = math.inf
 
     def __post_init__(self):
         assert self.max_tokens >= 1, "max_tokens must be >= 1"
         assert self.top_k >= 0, "top_k < 0 (0 disables the filter)"
         assert 0.0 < self.top_p <= 1.0, "top_p must be in (0, 1]"
+        assert self.deadline > 0, "deadline must be > 0 ticks (inf = none)"
         object.__setattr__(self, "stop_token_ids",
                            tuple(int(t) for t in self.stop_token_ids))
 
@@ -122,7 +128,10 @@ class RequestOutput:
     generated stream (0-based); ``step`` the engine tick it became available
     at (end-of-work convention, same clock as ``token_steps`` in results).
     ``finished`` is True on the request's final event, with ``finish_reason``
-    in {eos, stop, max_tokens, length_cap, oom, unschedulable}."""
+    in {eos, stop, max_tokens, length_cap, oom, unschedulable, timeout,
+    shed}. ``timeout``/``shed`` finishes carry ``token == -1`` — a
+    finish-only event with no token payload (the stream up to ``index``
+    tokens is still gapless)."""
 
     rid: int
     token: int

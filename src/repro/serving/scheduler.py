@@ -105,6 +105,12 @@ class Request:
     # recovery replay must land DENSE (policies pin its tier; falling back
     # to T2 would be a full-context recompute for nothing)
     recovering: bool = False
+    # deadline-aware shedding (policies.derive_deadlines): ABSOLUTE engine
+    # ticks; math.inf = none. Blown budgets retire the request with
+    # finish_reason "timeout" at the next tick boundary. ttft_deadline only
+    # applies while no first token has been emitted.
+    deadline: float = float("inf")
+    ttft_deadline: float = float("inf")
 
     @property
     def context(self) -> np.ndarray:
@@ -154,7 +160,8 @@ class Scheduler:
                       "escalations": 0, "deescalations": 0,
                       "peak_dense_pages": 0, "defrags": 0,
                       "prefix_hits": 0, "shared_prefix_tokens": 0,
-                      "shared_prefix_pages": 0, "cow_copies": 0}
+                      "shared_prefix_pages": 0, "cow_copies": 0,
+                      "timeouts": 0}
 
     # ------------------------------------------------------------- queries
 

@@ -1,0 +1,277 @@
+"""Fault-injection suite: FaultPlan/FaultyReplica harness units, a
+deterministic crash-drain-recover regression, and the chaos property — for
+ANY seeded fault schedule (crash / stall / exhaust at arbitrary ticks) over
+a mixed greedy+seeded trace, every request finishes exactly once with token
+streams identical to the fault-free run, and the allocator invariants hold
+on every surviving replica."""
+import numpy as np
+import pytest
+
+import jax
+
+from _hypothesis_compat import hypothesis, st  # optional dep; see pyproject
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.models import model as M
+from repro.serving.engine import ContinuousServeEngine
+from repro.serving.faults import (FaultEvent, FaultPlan, FaultyReplica,
+                                  ReplicaFault)
+from repro.serving.paged_cache import NULL_PAGE
+from repro.serving.request import (BATCH, INTERACTIVE, SamplingParams,
+                                   ServeRequest)
+from repro.serving.router import ReplicaRouter
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+SERVING = ServingCfg(num_slots=2, page_size=4, num_pages=33,
+                     max_blocks_per_slot=8, prefill_bucket=4, prefill_chunk=4,
+                     probe_interval=2, probe_failures=2, probe_backoff=2,
+                     auto_drain=True)
+
+
+@pytest.fixture(scope="module")
+def donor(model):
+    cfg, params = model
+    return ContinuousServeEngine(cfg, params, serving=SERVING)
+
+
+def _router(model, donor, n, plans=None, serving=SERVING, placement="rr"):
+    cfg, params = model
+    r = ReplicaRouter(cfg, params, num_replicas=n, serving=serving,
+                      placement=placement, fault_plans=plans)
+    for eng in r.engines:
+        eng.adopt_compiled(donor)
+    return r
+
+
+def _trace(n=6, max_tokens=6):
+    """Fixed mixed-class, mixed-sampling trace (greedy AND seeded rows)."""
+    rng = np.random.default_rng(42)
+    out = []
+    for i in range(n):
+        sp = (SamplingParams(temperature=0.8, top_k=10, seed=11 + i,
+                             max_tokens=max_tokens) if i % 3 == 0
+              else SamplingParams(max_tokens=max_tokens))
+        out.append(ServeRequest(
+            prompt=rng.integers(1, 200, size=int(rng.integers(3, 10))),
+            sampling=sp, slo=INTERACTIVE if i % 2 else BATCH,
+            arrival=float(i // 2)))
+    return out
+
+
+@pytest.fixture(scope="module")
+def reference(model, donor):
+    """Fault-free token streams for the fixed trace (the parity oracle)."""
+    cfg, params = model
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    res, _ = eng.serve(_trace())
+    return {rid: list(rec["tokens"]) for rid, rec in res.items()}
+
+
+def _check_alloc(eng):
+    sched = eng._st.sched
+    owned = [p for r in sched.occupied() if r.tier == 0 for p in r.pages]
+    assert len(set(owned)) == len(owned), "double-owned page"
+    assert NULL_PAGE not in owned
+    assert sched.dense_alloc.num_used == len(owned), "leaked/phantom pages"
+
+
+def _run_to_completion(router, cap=800):
+    for _ in range(cap):
+        if not router.has_unfinished():
+            return
+        router.step()
+    raise AssertionError(f"router did not finish within {cap} steps "
+                         f"(backlog={len(router._backlog)}, "
+                         f"draining={sorted(router._draining)})")
+
+
+# ------------------------------------------------------------ plan units
+
+
+def test_fault_plan_is_seed_deterministic():
+    a = FaultPlan.random(123, horizon=40, n_events=4)
+    b = FaultPlan.random(123, horizon=40, n_events=4)
+    assert a == b
+    assert all(e.kind in ("crash", "stall", "exhaust") for e in a.events)
+    assert all(1 <= e.tick < 40 for e in a.events)
+
+
+def test_fault_event_windows():
+    ev = FaultEvent(tick=3, kind="stall", duration=2)
+    assert not ev.active_at(2)
+    assert ev.active_at(3) and ev.active_at(4)
+    assert not ev.active_at(5)
+    with pytest.raises(AssertionError):
+        FaultEvent(tick=0, kind="meteor")
+    with pytest.raises(AssertionError):
+        FaultEvent(tick=-1, kind="crash")
+
+
+def test_fault_plan_overlap_and_horizon():
+    plan = FaultPlan((FaultEvent(2, "stall", 4), FaultEvent(3, "crash", 1)))
+    assert plan.active_at(1) is None
+    assert plan.active_at(3).kind == "stall"  # earliest event governs
+    assert plan.horizon() == 6
+    assert FaultPlan().active_at(0) is None and FaultPlan().horizon() == 0
+
+
+# --------------------------------------------------------- wrapper units
+
+
+class _FakeEngine:
+    """Minimal engine stand-in: counts steps, reports canned health."""
+
+    def __init__(self):
+        self.steps = 0
+        self.tag = "fake"
+
+    def step(self):
+        self.steps += 1
+        return ["tok"]
+
+    def health(self):
+        return {"alive": True, "has_work": True, "queued": 1,
+                "progress": self.steps, "free_frac": 0.5, "exhausted": False}
+
+    def arena_stats(self):
+        return {"free_frac": 0.5}
+
+
+def test_crash_raises_before_touching_engine():
+    inner = _FakeEngine()
+    rep = FaultyReplica(inner, FaultPlan((FaultEvent(1, "crash", 2),)))
+    assert rep.step() == ["tok"]                # tick 0: clean
+    with pytest.raises(ReplicaFault):
+        rep.step()                              # tick 1: crash window
+    with pytest.raises(ReplicaFault):
+        rep.health()                            # tick 2: still crashing
+    assert inner.steps == 1, "crash must fail-stop, not fail-corrupt"
+    assert rep.step() == ["tok"]                # tick 3: recovered
+    assert rep.faults_injected["crash"] == 2
+
+
+def test_stall_noops_and_exhaust_masks_pressure():
+    inner = _FakeEngine()
+    rep = FaultyReplica(inner, FaultPlan((FaultEvent(0, "stall", 1),
+                                          FaultEvent(1, "exhaust", 1))))
+    assert rep.step() == []                     # stalled: no inner work
+    assert inner.steps == 0
+    h = rep.health()                            # tick 1: exhaust window
+    assert h["exhausted"] and h["free_frac"] == 0.0
+    assert rep.arena_stats()["free_frac"] == 0.5  # window passed (peek)
+    assert rep.step() == ["tok"]
+
+
+def test_wrapper_forwards_everything_else():
+    inner = _FakeEngine()
+    rep = FaultyReplica(inner, FaultPlan())
+    assert rep.tag == "fake"
+    assert rep.arena_stats() == {"free_frac": 0.5}
+    for _ in range(5):
+        rep.step()
+    assert inner.steps == 5 and rep.clock == 5
+
+
+# ----------------------------------------- deterministic crash regression
+
+
+def test_crash_auto_drains_and_recovers_with_parity(model, donor, reference):
+    """Replica 0 crashes hard mid-trace: the monitor drains it through the
+    snapshot path, its work migrates, it re-admits after the fault window,
+    and every token stream matches the fault-free run bit-for-bit."""
+    plan = FaultPlan((FaultEvent(3, "crash", 4),))
+    router = _router(model, donor, 2, plans=[plan, None])
+    router.reset()
+    for r in _trace():
+        router.add_request(r)
+    _run_to_completion(router)
+    res = router.results()
+    assert {rid: list(rec["tokens"]) for rid, rec in res.items()} == reference
+    stats = router.stats()
+    assert stats["auto_drains"] >= 1, "crash never tripped the monitor"
+    assert stats["recoveries"] >= 1, "replica never re-admitted"
+    assert stats["draining"] == [], "recovered replica still out of service"
+    assert stats["dense_pages_leaked"] == 0
+    assert stats["timeouts"] == 0 and stats["shed"] == 0
+
+
+def test_exhaust_fault_trips_pressure_probe(model, donor, reference):
+    """A sustained exhaustion report (with queued work) is a probe failure
+    chain ending in auto-drain; service continues on the peer."""
+    plan = FaultPlan((FaultEvent(2, "exhaust", 10),))
+    router = _router(model, donor, 2, plans=[plan, None])
+    router.reset()
+    for r in _trace():
+        router.add_request(r)
+    _run_to_completion(router)
+    res = router.results()
+    assert {rid: list(rec["tokens"]) for rid, rec in res.items()} == reference
+    assert router.stats()["dense_pages_leaked"] == 0
+
+
+# ----------------------------------------------------- chaos (hypothesis)
+
+
+@hypothesis.given(seed=st.integers(0, 2 ** 31 - 1))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_chaos_any_fault_schedule_exact_once_and_parity(model, donor,
+                                                        reference, seed):
+    """THE acceptance property: any seeded fault schedule over the mixed
+    trace — every request finishes exactly once, greedy and seeded streams
+    match the fault-free run bit-for-bit (deadlines off, so no timeout
+    shedding by construction), and the allocator invariants hold on every
+    live replica after recovery."""
+    plans = [FaultPlan.random(seed, horizon=24, n_events=3),
+             FaultPlan.random(seed + 1, horizon=24, n_events=2)]
+    router = _router(model, donor, 2, plans=plans)
+    router.reset()
+    for r in _trace():
+        router.add_request(r)
+    _run_to_completion(router)
+
+    events = router.pending_outputs()
+    seen: dict[int, list] = {}
+    finished: dict[int, int] = {}
+    for ev in events:
+        if ev.token >= 0:
+            seen.setdefault(ev.rid, []).append(ev.index)
+        if ev.finished:
+            finished[ev.rid] = finished.get(ev.rid, 0) + 1
+    res = router.results()
+    assert set(res) == set(reference), "lost or phantom request records"
+    for rid, toks in reference.items():
+        assert list(res[rid]["tokens"]) == toks, (
+            f"rid {rid} diverged under fault schedule seed={seed}")
+        assert sorted(seen.get(rid, [])) == list(range(len(toks)))
+        assert finished.get(rid, 0) == 1, f"rid {rid} finished twice/never"
+    for eng in router.engines:
+        if eng._st is not None:
+            _check_alloc(eng.engine if isinstance(eng, FaultyReplica)
+                         else eng)
+    agg = router.stats()
+    assert agg["dense_pages_leaked"] == 0 and agg["cpq_pages_leaked"] == 0
+    assert agg["timeouts"] == 0 and agg["shed"] == 0
+
+
+def test_chaos_single_replica_parks_and_recovers(model, donor, reference):
+    """Worst case: ONE replica, crash window long enough to auto-drain the
+    whole fleet. Arrivals park in the router backlog (no raise — the old
+    behavior), place on recovery, and parity still holds."""
+    plan = FaultPlan((FaultEvent(2, "crash", 3),))
+    router = _router(model, donor, 1, plans=[plan])
+    router.reset()
+    for r in _trace():
+        router.add_request(r)   # must never raise, even while down
+    _run_to_completion(router)
+    res = router.results()
+    assert {rid: list(rec["tokens"]) for rid, rec in res.items()} == reference
+    stats = router.stats()
+    assert stats["auto_drains"] >= 1 and stats["recoveries"] >= 1
+    assert stats["backlog"] == 0 and stats["dense_pages_leaked"] == 0

@@ -1,0 +1,439 @@
+"""Health-monitor / rebalance / graceful-degradation suite: the probe state
+machine (suspect -> down -> backoff recovery -> readmit), the satellite
+regression that zero healthy replicas PARKS instead of raising, the
+migrate-without-drain primitive (mid-decode, mid-PREFILL, and double
+A->B->C migration — all token-exact), deadline-aware timeouts, and the
+bounded-backlog shed policy."""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.models import model as M
+from repro.serving.engine import ContinuousServeEngine
+from repro.serving.faults import FaultEvent, FaultPlan
+from repro.serving.health import HealthMonitor
+from repro.serving.request import (BATCH, INTERACTIVE, SamplingParams,
+                                   ServeRequest)
+from repro.serving.router import ReplicaRouter
+from repro.serving.scheduler import SchedulerConfigError
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+SERVING = ServingCfg(num_slots=2, page_size=4, num_pages=33,
+                     max_blocks_per_slot=8, prefill_bucket=4, prefill_chunk=4)
+FT = ServingCfg(num_slots=2, page_size=4, num_pages=33,
+                max_blocks_per_slot=8, prefill_bucket=4, prefill_chunk=4,
+                probe_interval=2, probe_failures=2, probe_backoff=2,
+                auto_drain=True)
+
+
+@pytest.fixture(scope="module")
+def donor(model):
+    cfg, params = model
+    return ContinuousServeEngine(cfg, params, serving=SERVING)
+
+
+def _router(model, donor, n, serving=SERVING, plans=None, placement="rr"):
+    cfg, params = model
+    r = ReplicaRouter(cfg, params, num_replicas=n, serving=serving,
+                      placement=placement, fault_plans=plans)
+    for eng in r.engines:
+        eng.adopt_compiled(donor)
+    return r
+
+
+def _run(router, cap=600):
+    for _ in range(cap):
+        if not router.has_unfinished():
+            return
+        router.step()
+    raise AssertionError("router did not finish")
+
+
+# ----------------------------------------------- probe state machine units
+
+
+class _ScriptedEngine:
+    """health() replays a script of dict responses / exceptions."""
+
+    def __init__(self, script):
+        self.script = list(script)
+
+    def health(self):
+        item = self.script.pop(0) if self.script else _OK
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+
+_OK = {"alive": True, "has_work": False, "queued": 0, "progress": 0,
+       "free_frac": 1.0, "exhausted": False}
+_BUSY = dict(_OK, has_work=True, queued=1, progress=5)
+
+
+class _FakeRouter:
+    def __init__(self, scripts):
+        self.engines = [_ScriptedEngine(s) for s in scripts]
+        self._manual_drained = set()
+        self.drained = []
+        self.readmitted = []
+
+    def _auto_drain(self, i):
+        self.drained.append(i)
+
+    def readmit(self, i):
+        self.readmitted.append(i)
+
+
+def test_monitor_drains_after_threshold_and_readmits_on_recovery():
+    boom = RuntimeError("dead")
+    r = _FakeRouter([[boom, boom, _OK]])
+    mon = HealthMonitor(r, interval=1, fail_threshold=2, backoff=2,
+                        auto_drain=True)
+    mon.tick(0)
+    assert mon.state(0) == "suspect" and r.drained == []
+    mon.tick(1)
+    assert mon.state(0) == "down" and r.drained == [0]
+    assert mon.replicas[0].next_probe == 1 + 2  # backoff, not interval
+    mon.tick(2)                                 # not due yet
+    assert r.readmitted == []
+    mon.tick(3)                                 # recovery probe succeeds
+    assert mon.state(0) == "healthy" and r.readmitted == [0]
+    assert mon.stats() == {"auto_drains": 1, "recoveries": 1, "down": 0}
+
+
+def test_monitor_backoff_doubles_and_caps():
+    r = _FakeRouter([[RuntimeError(i) for i in range(10)]])
+    mon = HealthMonitor(r, interval=1, fail_threshold=1, backoff=2,
+                        auto_drain=True)
+    mon.tick(0)
+    assert mon.state(0) == "down"
+    gaps = []
+    now = mon.replicas[0].next_probe
+    for _ in range(5):
+        mon.tick(now)
+        nxt = mon.replicas[0].next_probe
+        gaps.append(nxt - now)
+        now = nxt
+    assert gaps == [4, 8, 16, 16, 16], "expected doubling capped at 8x base"
+
+
+def test_monitor_progress_stall_detection():
+    stuck = dict(_BUSY)                          # same progress twice
+    r = _FakeRouter([[_BUSY, stuck, stuck]])
+    mon = HealthMonitor(r, interval=1, fail_threshold=3, backoff=2)
+    mon.tick(0)                                  # baseline: records progress
+    assert mon.state(0) == "healthy"
+    mon.tick(1)
+    assert mon.state(0) == "suspect", "no progress with work = failure"
+    assert "no progress" in mon.replicas[0].last_error
+
+
+def test_monitor_pressure_check_needs_queued_work():
+    empty_full = dict(_OK, free_frac=0.0)        # exhausted but no queue
+    queued_full = dict(_BUSY, free_frac=0.0)
+    r = _FakeRouter([[empty_full, queued_full]])
+    mon = HealthMonitor(r, interval=1, fail_threshold=3, exhaust_frac=0.0)
+    mon.tick(0)
+    assert mon.state(0) == "healthy", "exhaustion without demand is fine"
+    mon.tick(1)
+    assert mon.state(0) == "suspect"
+    assert "exhausted" in mon.replicas[0].last_error
+
+
+def test_monitor_skips_manually_drained():
+    r = _FakeRouter([[RuntimeError("x")] * 5])
+    r._manual_drained.add(0)
+    mon = HealthMonitor(r, interval=1, fail_threshold=1, auto_drain=True)
+    for t in range(4):
+        mon.tick(t)
+    assert mon.state(0) == "healthy" and r.drained == []
+
+
+# ------------------------------------- satellite: park instead of raise
+
+
+def test_zero_healthy_replicas_parks_then_places(model, donor):
+    """The old crash: every replica draining -> add_request raised
+    RuntimeError. Now the request parks in the backlog and places on the
+    first recovery."""
+    plan = FaultPlan((FaultEvent(1, "crash", 3),))
+    router = _router(model, donor, 1, serving=FT, plans=[plan])
+    router.reset()
+    rid0 = router.add_request(ServeRequest(
+        prompt=np.arange(1, 7), sampling=SamplingParams(max_tokens=4)))
+    # step until the monitor auto-drains the only replica
+    for _ in range(30):
+        router.step()
+        if router.healthy() == []:
+            break
+    assert router.healthy() == [], "fault never tripped auto-drain"
+    rid1 = router.add_request(ServeRequest(      # old behavior: raised here
+        prompt=np.arange(1, 7), sampling=SamplingParams(max_tokens=4)))
+    assert router.stats()["backlog"] >= 1
+    _run(router)
+    res = router.results()
+    assert set(res) >= {rid0, rid1}
+    assert res[rid1]["finish_reason"] == "max_tokens"
+    assert list(res[rid0]["tokens"]) == list(res[rid1]["tokens"]), (
+        "same prompt, same greedy stream — recovery changed tokens")
+    assert router.stats()["backlog"] == 0
+
+
+def test_manual_drain_still_guards_last_replica(model, donor):
+    router = _router(model, donor, 2, serving=FT)
+    router.reset()
+    router.drain(1)
+    with pytest.raises(SchedulerConfigError):
+        router.drain(0)
+    # ...but the forced (auto-drain) path may take the last one down
+    assert router.drain(0, force=True) == 0
+    assert router.healthy() == []
+
+
+# ------------------------------------------------------ stats satellite
+
+
+def test_stats_expose_health_and_robustness_counters(model, donor):
+    router = _router(model, donor, 2, serving=FT)
+    router.reset()
+    router.add_request(ServeRequest(prompt=np.arange(1, 6),
+                                    sampling=SamplingParams(max_tokens=3)))
+    _run(router)
+    stats = router.stats()
+    for key in ("timeouts", "shed", "rebalanced", "auto_drains",
+                "recoveries", "backlog", "backlog_timeouts", "down"):
+        assert key in stats, f"missing router stat {key}"
+    for row in stats["per_replica"]:
+        assert row["health"] == "healthy"
+        assert row["consecutive_failures"] == 0
+        assert row["auto_drained"] is False
+        assert "probe_failures" in row and "timeouts" in row
+
+
+# ------------------------------------------------ rebalance (no drain)
+
+
+def _ref_tokens(model, donor, reqs):
+    cfg, params = model
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    res, _ = eng.serve(reqs)
+    return {rid: list(rec["tokens"]) for rid, rec in res.items()}
+
+
+def test_rebalance_mid_decode_greedy_parity(model, donor):
+    reqs = [ServeRequest(prompt=np.arange(1, 8),
+                         sampling=SamplingParams(max_tokens=8), rid=i)
+            for i in range(3)]
+    ref = _ref_tokens(model, donor, reqs)
+    router = _router(model, donor, 2, placement="rr")
+    router.reset()
+    for r in reqs:
+        router.add_request(r)
+    for _ in range(6):
+        router.step()                            # rid 0 is decoding on 0
+    src = router.replica_of(0)
+    dst = 1 - src
+    assert router.rebalance(0, dst) is True
+    assert router.replica_of(0) == dst
+    assert router.healthy() == [0, 1], "rebalance must not drain anyone"
+    _run(router)
+    res = router.results()
+    for rid in ref:
+        assert list(res[rid]["tokens"]) == ref[rid]
+    stats = router.stats()
+    assert stats["rebalanced"] == 1 and stats["dense_pages_leaked"] == 0
+
+
+def test_rebalance_prefilling_row_token_exact(model, donor):
+    """Satellite: migrating a row that is still MID-CHUNK (prefilling state)
+    replays its snapshot token-exact — the chunked-prefill offset restarts
+    from the context, not from the partial arena write."""
+    long_prompt = np.arange(1, 25)               # 24 tokens = 6 chunks of 4
+    reqs = [ServeRequest(prompt=long_prompt,
+                         sampling=SamplingParams(max_tokens=6), rid=0)]
+    ref = _ref_tokens(model, donor, reqs)
+    router = _router(model, donor, 2, placement="rr")
+    router.reset()
+    router.add_request(reqs[0])
+    src = router.replica_of(0)
+    router.step()                                # 1 chunk in: prefilling
+    eng = router.engines[src]
+    row = [r for r in eng._st.sched.occupied() if r.rid == 0]
+    assert row and row[0].state == "prefilling", "row should be mid-prefill"
+    assert router.rebalance(0, 1 - src) is True
+    _run(router)
+    res = router.results()
+    assert list(res[0]["tokens"]) == ref[0]
+    assert res[0]["finish_reason"] == "max_tokens"
+    assert router.stats()["dense_pages_leaked"] == 0
+
+
+def test_double_migration_seeded_parity(model, donor):
+    """Satellite: A -> B -> C — two consecutive migrations of a SEEDED
+    request keep the sampled stream bit-exact (draws are fold_in(seed, i),
+    a function of the request alone)."""
+    sp = SamplingParams(temperature=0.9, top_k=12, seed=31, max_tokens=10)
+    reqs = [ServeRequest(prompt=np.arange(1, 9), sampling=sp, rid=0)]
+    ref = _ref_tokens(model, donor, reqs)
+    router = _router(model, donor, 3, placement="rr")
+    router.reset()
+    router.add_request(reqs[0])
+    a = router.replica_of(0)
+    for _ in range(4):
+        router.step()
+    b = (a + 1) % 3
+    assert router.rebalance(0, b) is True        # A -> B mid-stream
+    for _ in range(3):
+        router.step()
+    c = (b + 1) % 3
+    assert router.rebalance(0, c) is True        # B -> C mid-stream
+    assert router.replica_of(0) == c
+    _run(router)
+    res = router.results()
+    assert list(res[0]["tokens"]) == ref[0], "seeded stream diverged"
+    assert res[0]["preemptions"] >= 1
+    assert router.stats()["rebalanced"] == 2
+
+
+def test_rebalance_guards(model, donor):
+    router = _router(model, donor, 2)
+    router.reset()
+    rid = router.add_request(ServeRequest(
+        prompt=np.arange(1, 5), sampling=SamplingParams(max_tokens=2)))
+    src = router.replica_of(rid)
+    assert router.rebalance(rid, src) is False   # already there
+    assert router.rebalance(999, 1 - src) is False
+    with pytest.raises(SchedulerConfigError):
+        router.rebalance(rid, 7)
+    _run(router)
+    assert router.rebalance(rid, 1 - src) is False  # finished
+
+
+# --------------------------------------------------- deadlines / shedding
+
+
+def test_explicit_deadline_times_out(model, donor):
+    """A blown SamplingParams.deadline retires with finish_reason 'timeout'
+    at a tick boundary: counted, pages freed, finish-only event emitted."""
+    cfg, params = model
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    eng.reset()
+    events = []
+    eng.add_request(ServeRequest(
+        prompt=np.arange(1, 6),
+        sampling=SamplingParams(max_tokens=25, deadline=4.0)),
+        stream=events.append)
+    while eng.has_unfinished():
+        eng.step()
+    res = eng.results()[0]
+    assert res["finish_reason"] == "timeout"
+    assert len(res["tokens"]) < 25
+    fin = [e for e in events if e.finished]
+    assert len(fin) == 1 and fin[0].finish_reason == "timeout"
+    assert fin[0].token == -1 and fin[0].index == len(res["tokens"])
+    st = eng.stats()
+    assert st["timeouts"] == 1
+    assert st["dense_pages_leaked"] == 0, "timeout leaked arena pages"
+
+
+def test_deadline_scale_derives_slo_budgets(model, donor):
+    """deadline_scale turns finite SloClass targets into enforced budgets;
+    BATCH (infinite targets) never times out."""
+    cfg, params = model
+    tight = ServingCfg(num_slots=2, page_size=4, num_pages=33,
+                       max_blocks_per_slot=8, prefill_bucket=4,
+                       prefill_chunk=4, deadline_scale=0.25)
+    eng = ContinuousServeEngine(cfg, params, serving=tight)
+    eng.adopt_compiled(donor)
+    eng.reset()
+    r_int = eng.add_request(ServeRequest(
+        prompt=np.arange(1, 10), slo=INTERACTIVE,
+        sampling=SamplingParams(max_tokens=20)))
+    r_bat = eng.add_request(ServeRequest(
+        prompt=np.arange(1, 10), slo=BATCH,
+        sampling=SamplingParams(max_tokens=4)))
+    while eng.has_unfinished():
+        eng.step()
+    res = eng.results()
+    assert res[r_int]["finish_reason"] == "timeout", (
+        "0.25x-scaled INTERACTIVE budget should be unmeetable")
+    assert res[r_bat]["finish_reason"] == "max_tokens", (
+        "BATCH has no finite targets, hence no derived deadline")
+    assert eng.stats()["timeouts"] == 1
+
+
+def test_deadlines_off_by_default(model, donor):
+    cfg, params = model
+    eng = ContinuousServeEngine(cfg, params, serving=SERVING)
+    eng.adopt_compiled(donor)
+    eng.reset()
+    rid = eng.add_request(ServeRequest(
+        prompt=np.arange(1, 10), slo=INTERACTIVE,
+        sampling=SamplingParams(max_tokens=6)))
+    while eng.has_unfinished():
+        eng.step()
+    assert eng.results()[rid]["finish_reason"] == "max_tokens"
+    assert eng.stats()["timeouts"] == 0
+    assert not eng._st.has_deadlines
+
+
+def test_bounded_backlog_sheds_batch_class(model, donor):
+    """With every replica down and the backlog full, deadline-free
+    batch-class arrivals shed (counted, finished 'shed', never raised);
+    non-batch arrivals keep parking."""
+    shed_cfg = ServingCfg(num_slots=2, page_size=4, num_pages=33,
+                          max_blocks_per_slot=8, prefill_bucket=4,
+                          prefill_chunk=4, max_backlog=1, auto_drain=True,
+                          probe_interval=2, probe_failures=2,
+                          probe_backoff=2)
+    router = _router(model, donor, 1, serving=shed_cfg)
+    router.reset()
+    router._auto_drain(0)                        # monitor path, forced
+    assert router.healthy() == []
+    sp = SamplingParams(max_tokens=3)
+    r0 = router.add_request(ServeRequest(prompt=np.arange(1, 5),
+                                         slo=BATCH, sampling=sp))
+    r1 = router.add_request(ServeRequest(prompt=np.arange(1, 5),
+                                         slo=BATCH, sampling=sp))
+    r2 = router.add_request(ServeRequest(prompt=np.arange(1, 5),
+                                         slo=INTERACTIVE, sampling=sp))
+    stats = router.stats()
+    assert stats["shed"] == 1 and stats["backlog"] == 2
+    res = router.results()
+    assert res[r1]["finish_reason"] == "shed" and len(res[r1]["tokens"]) == 0
+    assert r0 not in res and r2 not in res, "parked work is not finished"
+    router.readmit(0)
+    _run(router)
+    res = router.results()
+    assert res[r0]["finish_reason"] == "max_tokens"
+    assert res[r2]["finish_reason"] == "max_tokens"
+
+
+def test_parked_requests_can_time_out(model, donor):
+    """A parked request past its deadline finishes 'timeout' from the
+    backlog — counted separately (backlog_timeouts) from engine timeouts."""
+    router = _router(model, donor, 1, serving=FT)
+    router.reset()
+    router._auto_drain(0)
+    rid = router.add_request(ServeRequest(
+        prompt=np.arange(1, 5),
+        sampling=SamplingParams(max_tokens=4, deadline=2.0)))
+    for _ in range(4):                           # router clock passes 2.0
+        router.step()
+    res = router.results()
+    assert res[rid]["finish_reason"] == "timeout"
+    stats = router.stats()
+    assert stats["backlog_timeouts"] == 1 and stats["backlog"] == 0
+    assert stats["timeouts"] == 1, "backlog timeouts fold into the total"
