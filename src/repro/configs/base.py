@@ -192,6 +192,22 @@ class ServingCfg:
     # deadline-free batch-class arrivals are SHED (counted, never raised).
     # 0 = unbounded parking, never shed.
     max_backlog: int = 0
+    # ---- speculative decoding (serving/speculative.py) ------------------
+    # n-gram / prompt-lookup speculative decoding: propose up to this many
+    # draft tokens per running row from its own context (no second model),
+    # land them in refcount-aliased scratch pages, and score all of them in
+    # ONE Q-chunk>1 paged attend — amortizing a full weight stream over
+    # spec_len candidates where decode is weight-stream-bound (low
+    # occupancy). 0 = off. Accepted tokens are ALWAYS re-drawn through the
+    # per-request fold_in(seed, token_index) sampler, so speculative
+    # on-vs-off is bit-exact for greedy rows and replay-stable for seeded
+    # ones. Active only for chunked engines in dense/T1/MLA/tiered modes
+    # (same gate as share_prefix).
+    spec_len: int = 0
+    # longest suffix n-gram matched against the row's earlier context when
+    # drafting (falls back to shorter n-grams down to 1; no match = normal
+    # single-token decode for that row this tick)
+    spec_ngram: int = 3
 
     def __post_init__(self):
         assert self.num_pages >= 2 and self.escalated_pages >= 2
@@ -208,6 +224,8 @@ class ServingCfg:
         assert self.probe_exhaust_frac <= 1.0
         assert self.deadline_scale >= 0.0
         assert self.max_backlog >= 0
+        assert self.spec_len >= 0
+        assert self.spec_ngram >= 1
         if self.prefill_chunk:
             assert self.prefill_chunk % self.page_size == 0, (
                 "prefill_chunk must be page-aligned "

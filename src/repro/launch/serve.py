@@ -45,6 +45,14 @@ def main(argv=None):
                     help="chunked paged prefill: prompts stream into arena "
                          "pages in chunks of this many tokens, interleaved "
                          "with decode (page-aligned; 0 = one-shot admission)")
+    ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                    help="speculative decoding: draft up to K tokens per row "
+                         "by prompt lookup (n-gram over the row's own "
+                         "context) and verify them in ONE chunked paged "
+                         "attend — accepted tokens land in the same tick "
+                         "(serving/speculative.py; greedy output is "
+                         "bit-identical on/off; requires --continuous and a "
+                         "chunked dense/decomposed engine; 0 = off)")
     ap.add_argument("--policy", default="fifo",
                     choices=["fifo", "priority", "slo"],
                     help="scheduler policy (serving/policies.py): fifo = "
@@ -116,6 +124,11 @@ def main(argv=None):
     if args.replicas > 1 and not args.continuous:
         ap.error("--replicas requires --continuous (the router fans out "
                  "over continuous-batching engines)")
+    if args.speculate and not args.continuous:
+        ap.error("--speculate requires --continuous (drafts alias paged "
+                 "arenas and verify through the chunked prefill path)")
+    if args.speculate < 0:
+        ap.error("--speculate must be >= 0 (0 disables)")
     if args.deadline_scale and not args.continuous:
         ap.error("--deadline-scale requires --continuous (tick deadlines "
                  "are enforced by the continuous scheduler)")
@@ -148,7 +161,7 @@ def main(argv=None):
             prefill_chunk=args.prefill_chunk, policy=args.policy,
             probe_interval=args.probe_interval,
             auto_drain=args.auto_drain or args.inject_faults is not None,
-            deadline_scale=args.deadline_scale)
+            deadline_scale=args.deadline_scale, spec_len=args.speculate)
         if args.replicas > 1:
             from repro.serving import ReplicaRouter
 
@@ -177,6 +190,11 @@ def main(argv=None):
                                         mesh=mesh)
         print(f"[serve] policy={args.policy}; chunked prefill: "
               f"{'on, chunk=' + str(args.prefill_chunk) if eng.chunked else 'off (one-shot admission)'}")
+        if args.speculate:
+            on = getattr(eng, "spec_on",
+                         args.replicas > 1)  # router: per-replica gate
+            print(f"[serve] speculative decoding: "
+                  f"{f'on, k={args.speculate} (prompt lookup)' if on else 'requested but gated off (needs chunked dense/decomposed)'}")
         if mesh is not None:
             print(f"[serve] mesh: data={mesh.shape['data']} "
                   f"model={mesh.shape['model']} "

@@ -264,19 +264,17 @@ def decode_step_rows(cfg: ModelConfig, rt: AttentionRuntime, params,
     return logits, {"prefix": new_prefix, "blocks": new_blocks}
 
 
-def prefill_chunk_rows(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
-                       first: bool, params, tokens: jax.Array,
-                       slot: jax.Array, block_row: jax.Array,
-                       offset: jax.Array, valid: jax.Array, caches):
-    """One CHUNK of a chunked paged admission prefill: ``tokens`` (1, C) is
-    the next slice of the prompt (padded to the static chunk size with the
-    edge token), embedded at absolute positions ``offset + i`` and written
-    straight into slot ``slot``'s arena pages — no contiguous scratch cache
-    is ever allocated, and one compiled shape serves every prompt length
-    (the per-(mode, padded-length) prefill variant zoo collapses to this
-    function's (mode, first-chunk) pair). Returns (logits (1, V) of the
-    chunk's LAST VALID position — meaningful on the final chunk only — and
-    the updated paged caches)."""
+def _chunk_forward(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
+                   first: bool, params, tokens: jax.Array, slot: jax.Array,
+                   block_row: jax.Array, offset: jax.Array, valid: jax.Array,
+                   caches):
+    """Shared trunk of the chunked paged forward pass: embed ``tokens``
+    (1, C) at absolute positions ``offset + i``, stream every layer's
+    chunk step (writes land straight in slot ``slot``'s arena pages through
+    ``block_row``; the chunk's queries attend ``[0, offset + i]`` via the
+    per-query-row causal mask). Returns the pre-norm hidden states
+    (1, C, D) and the updated caches — the prefill head keeps the last
+    valid position's logits, the speculative verify head keeps them all."""
     C = tokens.shape[1]
     positions = offset + jnp.arange(C, dtype=jnp.int32)
     x = embed_inputs(cfg, params["embed"], {"tokens": tokens}, positions)
@@ -304,10 +302,47 @@ def prefill_chunk_rows(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
             body, x, (tuple(params["blocks"]), tuple(caches["blocks"])))
         new_blocks = list(new_blocks)
 
+    return x, {"prefix": new_prefix, "blocks": new_blocks}
+
+
+def prefill_chunk_rows(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
+                       first: bool, params, tokens: jax.Array,
+                       slot: jax.Array, block_row: jax.Array,
+                       offset: jax.Array, valid: jax.Array, caches):
+    """One CHUNK of a chunked paged admission prefill: ``tokens`` (1, C) is
+    the next slice of the prompt (padded to the static chunk size with the
+    edge token), embedded at absolute positions ``offset + i`` and written
+    straight into slot ``slot``'s arena pages — no contiguous scratch cache
+    is ever allocated, and one compiled shape serves every prompt length
+    (the per-(mode, padded-length) prefill variant zoo collapses to this
+    function's (mode, first-chunk) pair). Returns (logits (1, V) of the
+    chunk's LAST VALID position — meaningful on the final chunk only — and
+    the updated paged caches)."""
+    x, caches = _chunk_forward(cfg, rt, tier, first, params, tokens, slot,
+                               block_row, offset, valid, caches)
     x = jax.lax.dynamic_slice_in_dim(x, valid - 1, 1, axis=1)
     x = apply_norm(cfg, params["final_norm"], x)
     logits = lm_logits(cfg, params, x)[:, 0]
-    return logits, {"prefix": new_prefix, "blocks": new_blocks}
+    return logits, caches
+
+
+def verify_chunk_rows(cfg: ModelConfig, rt: AttentionRuntime, tier: int,
+                      first: bool, params, tokens: jax.Array,
+                      slot: jax.Array, block_row: jax.Array,
+                      offset: jax.Array, valid: jax.Array, caches):
+    """Speculative-decoding verification chunk: the SAME chunked paged
+    forward pass as ``prefill_chunk_rows`` (one weight stream, Q-chunk>1
+    paged attend with the per-query-row causal mask, writes into the
+    draft's scratch pages through ``block_row``), but the head keeps the
+    logits of EVERY chunk position — position ``offset + i`` scores
+    candidate ``i+1`` — so all k drafted tokens are verified in a single
+    model invocation. Returns (logits (1, C, V), updated caches); rows at
+    ``i >= valid`` are jit padding (never sampled, writes masked)."""
+    x, caches = _chunk_forward(cfg, rt, tier, first, params, tokens, slot,
+                               block_row, offset, valid, caches)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = lm_logits(cfg, params, x)
+    return logits, caches
 
 
 def pack_prefill_caches(cfg: ModelConfig, rt: AttentionRuntime, paged, src,

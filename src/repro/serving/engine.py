@@ -316,6 +316,13 @@ class ContinuousServeEngine:
         self.share_prefix = (bool(getattr(serving, "share_prefix", False))
                              and self.chunked
                              and rt.mode in ("dense", "decomposed"))
+        # speculative decoding (serving/speculative.py): same gate family as
+        # prefix sharing — the verify chunk IS a chunked paged forward pass,
+        # and draft scratch pages carry purely positional payload. Tiered
+        # engines speculate on tier-0 rows only (_spec_eligible).
+        self.spec_on = (serving.spec_len > 0 and self.chunked
+                        and rt.mode in ("dense", "decomposed"))
+        self._verify_fns: dict[int, object] = {}
         self._copy_page = jax.jit(partial(M.copy_page_caches, cfg, rt))
         # cache-bearing layer count for the traffic model
         self._n_cache_layers = sum(1 for m, _ in cfg.layer_kinds if m in ("attn", "mla"))
@@ -359,6 +366,17 @@ class ContinuousServeEngine:
             self._chunk_fns[key] = jax.jit(
                 partial(M.prefill_chunk_rows, self.cfg, rt_t, tier, first))
         return self._chunk_fns[key]
+
+    def _verify_fn(self, tier: int):
+        """Jitted speculative-verify step (the chunk forward pass with
+        logits kept at EVERY position): ONE compiled shape —
+        ``spec_len + 1`` wide — serves every draft, every request
+        (``first=False``: a running row always has history)."""
+        if tier not in self._verify_fns:
+            rt_t = self._rt_for_tier(tier)
+            self._verify_fns[tier] = jax.jit(
+                partial(M.verify_chunk_rows, self.cfg, rt_t, tier, False))
+        return self._verify_fns[tier]
 
     def _bucketed(self, ctx: np.ndarray) -> tuple[np.ndarray, int]:
         """Right-pad to the prefill bucket with the edge token (padding never
@@ -632,6 +650,7 @@ class ContinuousServeEngine:
             setattr(self, name, getattr(other, name))
         self._prefills = other._prefills
         self._chunk_fns = other._chunk_fns
+        self._verify_fns = other._verify_fns
 
     def arena_stats(self) -> dict:
         """Public allocator surface (``Scheduler.arena_stats()``) plus the
@@ -882,6 +901,121 @@ class ContinuousServeEngine:
                                             jnp.asarray(dst, jnp.int32))
             return True
 
+    # ------------------------------------------------- speculative decoding
+
+    def _spec_eligible(self, req: Request) -> bool:
+        """Whether a row can take a speculative step this tick: running on
+        tier 0 (drafts alias DENSE pages), not opted out, with generation
+        budget for at least the verify draw plus one accepted candidate
+        (``budget >= 2`` — a 1-token budget speculates nothing and just
+        decodes)."""
+        sp = req.sampling
+        return (req.state == "running" and req.tier == 0
+                and req.draft is None
+                and (sp is None or sp.speculate)
+                and req.max_new_tokens - req.num_generated >= 2)
+
+    def _verify_draws(self, req: Request, logits: jax.Array) -> np.ndarray:
+        """The request's OWN sampler draws at every chunk position: row i
+        (absolute position ``length + i``) is drawn at stream index
+        ``num_generated + i`` through the same jitted ``sample_token_rows``
+        the normal decode path uses — a committed token is ALWAYS
+        ``fold_in(seed, token_index)``'s draw (argmax for greedy rows),
+        bit-identical speculative on-vs-off. ``logits`` is (C, V); padding
+        rows produce garbage draws the caller never reads."""
+        sp = req.sampling
+        if sp is None or sp.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        C = logits.shape[0]
+        args = (jnp.full((C,), sp.temperature, jnp.float32),
+                jnp.full((C,), sp.top_k, jnp.int32),
+                jnp.full((C,), sp.top_p, jnp.float32),
+                jnp.full((C,), sp.seed & 0x7fffffff, jnp.int32),
+                jnp.asarray(req.num_generated
+                            + np.arange(C, dtype=np.int32)))
+        return np.asarray(self._sample_rows(logits,
+                                            *self._place_replicated(args)))
+
+    def _speculate_row(self, st: _ServeState, req: Request) -> bool:
+        """One speculative decode step for a single running row: draft up to
+        ``spec_len`` candidates from the row's own context (prompt lookup),
+        alias its pages + allocate scratch (``Scheduler.begin_draft``), run
+        ONE verify chunk over [last_tok, draft...] at positions
+        ``length..length+k``, and commit the longest prefix of candidates
+        that EQUALS the request's own sampler draws — every committed token
+        lands this tick (ITL 0 between them). Returns True iff the row was
+        handled speculatively (the caller masks it out of the batched
+        decode); False falls back to the normal decode step with the draft
+        fully unwound.
+
+        Clock model: the verify chunk is ONE model invocation and costs one
+        tick — the win is tokens-per-invocation (up to k+1 per weight
+        stream), never free ticks."""
+        sched = st.sched
+        serving = self.serving
+        L = req.length
+        budget = req.max_new_tokens - req.num_generated
+        cap = serving.max_blocks_per_slot * serving.page_size - 1 - L
+        k = min(serving.spec_len, budget - 1, cap)
+        if k < 1:
+            return False
+        from repro.serving.speculative import propose_ngram
+
+        # req.context ends with last_tok (length L+1 for a running row):
+        # the draft continues the stream the verify chunk's first query
+        # position (L, carrying last_tok) extends
+        draft = propose_ngram(req.context, serving.spec_ngram, k)
+        k = int(len(draft))
+        if k < 1:
+            return False
+        d = sched.begin_draft(req, k)
+        if d is None:
+            return False  # arena pressure / block ceiling: normal decode
+        d.tokens = [int(t) for t in draft]
+        if d.copy_src >= 0:
+            # partial frontier: seed the replacing scratch page's payload
+            # (the same jitted copy the COW split uses)
+            st.caches = self._copy_page(st.caches,
+                                        jnp.asarray(d.copy_src, jnp.int32),
+                                        jnp.asarray(d.scratch[0], jnp.int32))
+        row = sched.draft_block_row(req)
+        C = serving.spec_len + 1
+        toks = np.full((C,), int(st.last_tok[req.slot]), np.int32)
+        toks[1:1 + k] = draft
+        valid = k + 1
+        logits, st.caches = self._verify_fn(req.tier)(
+            self.params, jnp.asarray(toks[None]),
+            jnp.asarray(req.slot, jnp.int32), jnp.asarray(row),
+            jnp.asarray(L, jnp.int32), jnp.asarray(valid, jnp.int32),
+            st.caches)
+        # clock + traffic: one model invocation reading L+valid positions
+        st.decode_steps += 1
+        st.live_steps += 1
+        st.traffic += float(L + valid) * st.bpt0 * self._n_cache_layers
+        st.interconnect += valid * st.concat_bpt + st.gather_bps
+        util = sched.dense_alloc.utilization
+        st.util_peak = max(st.util_peak, util)
+        st.util_sum += util
+        st.util_n += 1
+        st.trace_active.append(1)
+        st.trace_util.append(util)
+        st.step += 1
+
+        draws = self._verify_draws(req, logits[0])
+        n_accept = 1  # position L's draw is this tick's own next token
+        for j in range(k):
+            if int(draws[j]) == int(draft[j]):
+                n_accept += 1
+            else:
+                break
+        sched.commit_draft(req, n_accept)
+        for j in range(n_accept):
+            if req.state != "running":
+                break  # a draw hit eos/stop/budget: the rest never emits
+            self._emit_token(st, req, int(draws[j]), st.step, grow=True)
+            sched.register_prefix(req)
+        return True
+
     # ----------------------------------------------------------------- run
 
     def step(self) -> list[RequestOutput]:
@@ -1038,7 +1172,29 @@ class ContinuousServeEngine:
         active = sched.active_mask()
         if fresh_slot >= 0:
             active[fresh_slot] = False
+
+        # 4b) speculative decoding: eligible rows take a per-row verify
+        #     chunk instead of joining the batched decode (each verify is
+        #     its own model invocation / tick — see _speculate_row). A row
+        #     whose draft cannot open (no recurring n-gram, arena pressure)
+        #     stays in ``active`` and decodes normally below.
+        did_spec = False
+        if self.spec_on:
+            for req in sorted(sched.running(), key=lambda r: r.admitted_step):
+                slot = req.slot
+                if slot < 0 or not active[slot]:
+                    continue
+                if not self._spec_eligible(req):
+                    continue
+                if self._speculate_row(st, req):
+                    active[slot] = False
+                    did_spec = True
+
         if not active.any():
+            if did_spec:
+                # the verify invocations already charged their ticks (and
+                # this tick's prompt chunk, if any, rode along with them)
+                return st.step_outputs
             if did_chunk:
                 st.step += 1     # prefill-only tick still costs a tick
                 return st.step_outputs
@@ -1119,6 +1275,9 @@ class ContinuousServeEngine:
             "tiered": self.tiered,
             "chunked_prefill": self.chunked,
             "prefix_sharing": self.share_prefix,
+            "spec_on": self.spec_on,
+            "spec_accept_rate": (sched.stats["spec_accepted"]
+                                 / max(sched.stats["spec_drafted"], 1)),
             "policy": sched.policy.name,
             "model_shards": self.model_shards,
             "arena_bytes_total": total_bytes,

@@ -230,11 +230,18 @@ def pages_needed(tokens: int, page_size: int) -> int:
     return -(-int(tokens) // page_size)
 
 
-def defrag_plan(block_table, num_pages: int):
+def defrag_plan(block_table, num_pages: int, shared=None):
     """Compaction plan: remap every mapped page onto the lowest physical ids,
     ordered by (slot, logical block) so each request's pages become physically
     contiguous again after a churn of retirements (locality for the fused
     kernels' sequential page reads).
+
+    ``shared`` (optional) is the set of pages with refcount > 1 (prefix
+    sharing): they are stably partitioned to the FRONT of the compacted
+    range, so the pages every sharer re-reads each tick cluster on the
+    lowest ids — one hot region instead of being interleaved with
+    single-owner pages (and they stay put across repeated compactions,
+    keeping the prefix index's physical ids maximally stable).
 
     ``block_table`` is a host array (B, max_blocks). Returns
     (perm, new_block_table, free): ``perm[new_id] = old_id`` — apply to every
@@ -251,6 +258,9 @@ def defrag_plan(block_table, num_pages: int):
             if p != NULL_PAGE and p not in seen:
                 seen.add(p)
                 used.append(p)
+    if shared:
+        used = ([p for p in used if p in shared]
+                + [p for p in used if p not in shared])
     perm = [NULL_PAGE] + used
     in_front = set(perm)
     perm += [p for p in range(num_pages) if p not in in_front]  # park stale pages

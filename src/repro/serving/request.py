@@ -63,6 +63,11 @@ class SamplingParams:
     # request retires with finish_reason "timeout" (pages freed, counted in
     # the ``timeouts`` stat). Overrides any SloClass-derived budget.
     deadline: float = math.inf
+    # per-request opt-out of speculative decoding (engines with
+    # ``ServingCfg.spec_len > 0``). Output-invisible either way: committed
+    # tokens are always the request's own fold_in(seed, token_index) draws
+    # (argmax for greedy), speculation only changes WHEN they land.
+    speculate: bool = True
 
     def __post_init__(self):
         assert self.max_tokens >= 1, "max_tokens must be >= 1"

@@ -111,6 +111,10 @@ class Request:
     # applies while no first token has been emitted.
     deadline: float = float("inf")
     ttft_deadline: float = float("inf")
+    # open speculative draft (serving/speculative.py): scratch pages +
+    # aliased-page references between begin_draft and commit/abort. Any
+    # release path (retire/preempt/escalate/deescalate) aborts it first.
+    draft: Optional[object] = None
 
     @property
     def context(self) -> np.ndarray:
@@ -161,7 +165,8 @@ class Scheduler:
                       "peak_dense_pages": 0, "defrags": 0,
                       "prefix_hits": 0, "shared_prefix_tokens": 0,
                       "shared_prefix_pages": 0, "cow_copies": 0,
-                      "timeouts": 0}
+                      "timeouts": 0, "spec_steps": 0, "spec_drafted": 0,
+                      "spec_accepted": 0}
 
     # ------------------------------------------------------------- queries
 
@@ -214,11 +219,23 @@ class Scheduler:
         """Compact the BASE (dense-tier) arena: relabel every mapped page
         onto the lowest physical ids (paged_cache.defrag_plan), rewrite the
         block tables and every tier-0 request's page list, and rebuild the
-        allocator free list. Returns the (num_pages,) permutation to apply
-        to every base-arena page pool (``perm[new_id] = old_id``), or None
-        when the arena is already compact. Escalated (tier-1) pages live in
-        the CPQ arena and are untouched."""
-        perm, new_bt, free = defrag_plan(self.block_tables, self.cfg.num_pages)
+        allocator free list. SHARED pages (refcount > 1) compact FIRST —
+        every sharer's sequential page reads start from the same dense
+        low-id cluster, so the hottest pages get the tightest locality.
+        Returns the (num_pages,) permutation to apply to every base-arena
+        page pool (``perm[new_id] = old_id``), or None when the arena is
+        already compact. Escalated (tier-1) pages live in the CPQ arena and
+        are untouched."""
+        if any(r.draft is not None for r in self.occupied()):
+            # an open speculative draft owns scratch pages that are
+            # invisible to the block tables — relabeling now would mark
+            # them free (DoubleFree in relabel). Drafts close within the
+            # engine tick; compaction just waits one tick.
+            return None
+        shared = {p for p in range(1, self.cfg.num_pages)
+                  if self.dense_alloc.refcount(p) > 1}
+        perm, new_bt, free = defrag_plan(self.block_tables,
+                                         self.cfg.num_pages, shared=shared)
         if all(int(p) == i for i, p in enumerate(perm)):
             return None
         remap = {int(old): new for new, old in enumerate(perm)}
@@ -351,6 +368,104 @@ class Scheduler:
                                              self.dense_alloc.num_used)
         return True
 
+    # ------------------------------------------------- speculative drafts
+
+    def begin_draft(self, req: Request, k: int):
+        """Open a speculative draft of ``k`` candidate tokens on a running
+        tier-0 row: take one reference on EVERY page the row currently maps
+        (the draft aliases the target's history — zero arena writes) and
+        allocate fresh SCRATCH pages for the blocks positions
+        ``length..length+k`` land in. A PARTIAL frontier page is replaced
+        by a scratch page (``copy_src`` names it — the engine seeds the
+        payload with the jitted page copy) so verification never writes
+        into a page the target or a prefix sharer owns; a mapped EMPTY
+        frontier at a page boundary stays target-owned (nothing valid to
+        preserve, exclusively owned by construction). Returns the
+        DraftState, or None when the draft cannot be opened (arena
+        pressure / block ceiling) — the caller falls back to a normal
+        decode step."""
+        from repro.serving.speculative import DraftState
+
+        assert req.draft is None, "draft already open"
+        assert req.state == "running" and req.tier == 0 and req.slot >= 0
+        assert k >= 1
+        ps = self.cfg.page_size
+        L = req.length
+        b1 = (L + k) // ps
+        if b1 >= self.cfg.max_blocks_per_slot:
+            return None
+        n_mapped = len(req.pages)
+        if L % ps:
+            first_blk, copy_src = L // ps, int(req.pages[L // ps])
+        else:
+            # frontier at a page boundary: n_mapped is b0 (unmapped) or
+            # b0+1 (pre-mapped empty by the growth phase) — scratch starts
+            # right after the mapped blocks either way
+            first_blk, copy_src = n_mapped, -1
+        blocks = list(range(first_blk, b1 + 1))
+        if not self.dense_alloc.can_alloc(len(blocks)):
+            return None
+        scratch = self.dense_alloc.alloc(len(blocks))
+        aliased = [int(p) for p in req.pages]
+        for p in aliased:
+            self.dense_alloc.incref(p)
+        req.draft = DraftState(scratch=scratch, blocks=blocks,
+                               aliased=aliased, copy_src=copy_src)
+        self.stats["peak_dense_pages"] = max(self.stats["peak_dense_pages"],
+                                             self.dense_alloc.num_used)
+        return req.draft
+
+    def draft_block_row(self, req: Request) -> np.ndarray:
+        """The draft's logical view of the row: the target's block row with
+        the scratch tail installed (history blocks read the target's own
+        pages — that is the aliasing)."""
+        d = req.draft
+        row = self.block_tables[req.slot].copy()
+        for b, p in zip(d.blocks, d.scratch):
+            row[b] = p
+        return row
+
+    def commit_draft(self, req: Request, n_accept: int) -> None:
+        """Close the draft accepting ``n_accept`` committed tokens (the
+        verified draws; always >= 1 — the position-``length`` draw is the
+        tick's own next token). Scratch pages covering the newly valid
+        positions are ADOPTED into the row's page list in block order (a
+        replaced partial frontier decrefs the original — the adopted copy
+        doubles as its copy-on-write split if a sharer holds it); surplus
+        scratch and every aliased reference are released. The row's length
+        grows via the engine's per-token emits, not here."""
+        d = req.draft
+        assert d is not None and n_accept >= 1
+        last_blk = (req.length + n_accept - 1) // self.cfg.page_size
+        for b, p in zip(d.blocks, d.scratch):
+            if b > last_blk:
+                self._free_pages(0, [p])        # surplus: never became valid
+            elif b < len(req.pages):
+                old = req.pages[b]              # replaced partial frontier
+                req.pages[b] = p
+                self.block_tables[req.slot, b] = p
+                self._free_pages(0, [old])
+            else:
+                assert b == len(req.pages), "scratch adoption out of order"
+                req.pages.append(p)
+                self.block_tables[req.slot, b] = p
+        self._free_pages(0, d.aliased)
+        req.draft = None
+        self.stats["spec_steps"] += 1
+        self.stats["spec_drafted"] += len(d.tokens)
+        self.stats["spec_accepted"] += n_accept - 1
+
+    def abort_draft(self, req: Request) -> None:
+        """Close the draft accepting nothing: drop the aliased references
+        and free the scratch pages. The target row is untouched — reject
+        costs zero arena writes."""
+        d = req.draft
+        if d is None:
+            return
+        self._free_pages(0, d.aliased)
+        self._free_pages(0, d.scratch)
+        req.draft = None
+
     # ------------------------------------------------ prefix sharing / COW
 
     def _free_pages(self, tier: int, pages) -> None:
@@ -417,6 +532,7 @@ class Scheduler:
     # ---------------------------------------------------- retire / preempt
 
     def _release(self, req: Request) -> None:
+        self.abort_draft(req)
         self._free_pages(req.tier, req.pages)
         req.pages = []
         req.indexed_blocks = 0
@@ -490,6 +606,7 @@ class Scheduler:
         (dense_row, cpq_row) block rows for the jitted re-compression (the
         dense_row is the PRE-escalation mapping the gather reads)."""
         assert self.tiered and req.tier == 0
+        self.abort_draft(req)   # drafts are a tier-0 feature
         slot = req.slot
         dense_row = self.block_tables[slot].copy()
         need = pages_needed(req.length + 1, self.cfg.page_size)

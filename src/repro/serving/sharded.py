@@ -215,7 +215,13 @@ def chunk_attend_sharded(
     """shard_map wrapper of ``chunk_attend_paged`` (chunked paged prefill):
     the chunk's payload lands in each device's local arena shard and its C
     queries attend per head shard. Returns (out (1,C,H,Dv) head-sharded,
-    new_cache)."""
+    new_cache).
+
+    C is whatever the caller compiled — prompt chunks (``prefill_chunk``)
+    and speculative verify chunks (``spec_len + 1``; engine._verify_fn)
+    share this wrapper, so mesh serving gets speculative decoding with no
+    extra collectives: the verify chunk pays exactly one prompt-chunk's
+    interconnect (per-head output concat + latent pool gather)."""
     from repro.serving import paged_cache as pgc
 
     mesh = rt.mesh

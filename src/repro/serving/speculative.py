@@ -1,0 +1,87 @@
+"""Speculative decoding over paged arenas: drafting + draft bookkeeping.
+
+Decode at low occupancy is weight-stream-bound — every generated token
+re-streams the full weight set (the idle amplification bench_e2e_energy's
+device model charges). Speculative decoding amortizes ONE weight stream over
+up to ``ServingCfg.spec_len`` candidate tokens:
+
+1. **Drafting is free**: ``propose_ngram`` (prompt lookup) guesses the next
+   tokens from the request's OWN context — the longest suffix n-gram that
+   occurred earlier proposes the tokens that followed it. No second model,
+   no extra weights on the mesh.
+2. **Draft rows alias the target's pages**: ``Scheduler.begin_draft`` takes
+   a reference on every page the target currently maps (the PR-7 refcounted
+   block tables) and allocates fresh SCRATCH pages only for the blocks the
+   candidates land in — zero arena writes for the shared history. A partial
+   frontier page is replaced by a payload-copied scratch page so
+   verification never writes into a page the target (or a prefix sharer)
+   still owns; reject leaves the target's arena bit-identical.
+3. **Verification is one Q-chunk>1 paged attend**: the engine runs
+   ``model.verify_chunk_rows`` — the chunked-prefill forward pass
+   (per-query-row causal mask, scalar-prefetch paged kernels, shard_map
+   routing under a mesh) with logits kept at EVERY position — scoring all
+   k candidates in a single model invocation.
+4. **Accept/reject keeps the sampler reproducible**: position ``L+i``'s
+   logits are drawn through the SAME jitted ``sample_token_rows`` at stream
+   index ``num_generated + i`` — a committed token is ALWAYS the request's
+   own ``fold_in(seed, token_index)`` draw (argmax for greedy rows), and a
+   draft token is accepted iff it EQUALS that draw. Greedy streams are
+   bit-identical speculative on-vs-off; seeded streams are
+   distribution-exact (every committed token is an on-policy sampler draw)
+   and replay-stable across preemption and router migration.
+
+The scheduler ops (``begin_draft`` / ``commit_draft`` / ``abort_draft``)
+keep the allocator invariant — refcount == owner count, free-list
+membership iff refcount 0 — under ANY interleaving with
+admit/chunk/COW/preempt/escalate/retire/defrag
+(``tests/test_serving_speculative.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class DraftState:
+    """Page bookkeeping for one OPEN draft (between ``begin_draft`` and
+    ``commit_draft``/``abort_draft``; the engine opens and closes a draft
+    within a single tick, but the scheduler ops tolerate any interleaving).
+
+    ``scratch[i]`` is the fresh page standing in for logical block
+    ``blocks[i]`` in the draft's view of the row; ``aliased`` are the
+    target's own pages the draft holds one reference each on (history reads
+    plus the replaced frontier). ``copy_src >= 0`` names the partial
+    frontier page whose payload must seed ``scratch[0]`` before the verify
+    chunk runs (the engine's jitted page copy)."""
+
+    tokens: list = field(default_factory=list)   # drafted candidate tokens
+    scratch: list = field(default_factory=list)  # fresh pages, block order
+    blocks: list = field(default_factory=list)   # logical blocks they cover
+    aliased: list = field(default_factory=list)  # target pages incref'd
+    copy_src: int = -1
+
+
+def propose_ngram(ctx: np.ndarray, max_ngram: int, k: int) -> np.ndarray:
+    """Prompt-lookup drafting: match the longest suffix n-gram
+    (``n = max_ngram`` down to 1) against the earlier context; the LATEST
+    occurrence wins (recency — repeated structure near the cursor predicts
+    best) and the ``k`` tokens that followed it become the draft. Returns
+    (<=k,) int32 — possibly empty (no n-gram recurs: the caller falls back
+    to a normal decode step for the row)."""
+    ctx = np.asarray(ctx, np.int32)
+    T = int(len(ctx))
+    if k <= 0 or T < 2:
+        return np.zeros((0,), np.int32)
+    for n in range(min(max_ngram, T - 1), 0, -1):
+        pat = ctx[T - n:]
+        # candidate windows start at 0..T-n-1: a match must be FOLLOWED by
+        # at least one context token (the window at the suffix's own
+        # position is excluded by construction)
+        hay = np.lib.stride_tricks.sliding_window_view(ctx[:T - 1], n)
+        hits = np.nonzero((hay == pat[None, :]).all(axis=1))[0]
+        if len(hits):
+            start = int(hits[-1]) + n
+            return ctx[start:start + k].copy()
+    return np.zeros((0,), np.int32)
