@@ -1,0 +1,7 @@
+"""Shim: ``python -m launch.serve`` -> ``repro.launch.serve`` (see there)."""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""Shim: ``python -m launch.tune`` -> ``repro.launch.tune`` (see there)."""
+import sys
+
+from repro.launch.tune import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -210,31 +210,125 @@ class ServingCfg:
     spec_ngram: int = 3
 
     def __post_init__(self):
-        assert self.num_pages >= 2 and self.escalated_pages >= 2
-        assert self.page_size >= 1 and self.num_slots >= 1
-        assert 0.0 <= self.critical_watermark <= self.low_watermark <= 1.0
-        assert self.low_watermark <= self.high_watermark <= 1.0
-        assert self.policy in ("fifo", "priority", "slo"), self.policy
-        assert self.prefill_bucket >= 1
-        assert self.prefill_chunk >= 0
-        assert self.defrag_every >= 0
-        assert self.probe_interval >= 0
-        assert self.probe_failures >= 1
-        assert self.probe_backoff >= 1
-        assert self.probe_exhaust_frac <= 1.0
-        assert self.deadline_scale >= 0.0
-        assert self.max_backlog >= 0
-        assert self.spec_len >= 0
-        assert self.spec_ngram >= 1
-        if self.prefill_chunk:
-            assert self.prefill_chunk % self.page_size == 0, (
-                "prefill_chunk must be page-aligned "
-                f"({self.prefill_chunk} % {self.page_size} != 0)")
+        self.validate(strict=False)
+
+    def validate(self, strict: bool = True) -> "ServingCfg":
+        """Raise ``ValueError`` (with the knob names spelled out) for
+        inconsistent configurations, instead of letting them fail deep in
+        the scheduler or silently gate features off.
+
+        ``strict=False`` checks only the hard construction invariants
+        (ranges, page alignment of the prefill chunk, watermark ordering) —
+        this is what ``__post_init__`` runs, so an invalid combination can
+        never be constructed. ``strict=True`` (the default; called at
+        ``ContinuousServeEngine`` construction and by the auto-tuner after
+        ``validate_and_repair``) additionally rejects config-level
+        cross-knob inconsistencies: knobs that REQUEST a feature the rest of
+        the config gates off (speculative decoding without chunked
+        admission) and capacity settings no request could ever run under.
+        Returns ``self`` so call sites can chain it."""
+
+        def bad(msg: str):
+            raise ValueError(f"ServingCfg: {msg}")
+
+        if not (self.num_pages >= 2 and self.escalated_pages >= 2):
+            bad(f"num_pages={self.num_pages} and escalated_pages="
+                f"{self.escalated_pages} must each be >= 2 (page 0 is the "
+                "reserved null page)")
+        if not (self.page_size >= 1 and self.num_slots >= 1
+                and self.max_blocks_per_slot >= 1):
+            bad(f"page_size={self.page_size}, num_slots={self.num_slots}, "
+                f"max_blocks_per_slot={self.max_blocks_per_slot} must all "
+                "be >= 1")
+        if not 0.0 <= self.critical_watermark <= self.low_watermark <= 1.0:
+            bad(f"watermarks must satisfy 0 <= critical_watermark "
+                f"({self.critical_watermark}) <= low_watermark "
+                f"({self.low_watermark}) <= 1")
+        if not self.low_watermark <= self.high_watermark <= 1.0:
+            bad(f"high_watermark ({self.high_watermark}) must lie in "
+                f"[low_watermark ({self.low_watermark}), 1] — it is the "
+                "de-escalation hysteresis threshold above low")
+        if self.policy not in ("fifo", "priority", "slo"):
+            bad(f"policy={self.policy!r} not one of fifo|priority|slo")
+        if self.prefill_bucket < 1:
+            bad(f"prefill_bucket={self.prefill_bucket} must be >= 1")
+        if self.prefill_chunk < 0:
+            bad(f"prefill_chunk={self.prefill_chunk} must be >= 0 "
+                "(0 = one-shot admission)")
+        if self.defrag_every < 0:
+            bad(f"defrag_every={self.defrag_every} must be >= 0 (0 = off)")
+        if self.probe_interval < 0:
+            bad(f"probe_interval={self.probe_interval} must be >= 0")
+        if self.probe_failures < 1 or self.probe_backoff < 1:
+            bad(f"probe_failures={self.probe_failures} and probe_backoff="
+                f"{self.probe_backoff} must be >= 1")
+        if self.probe_exhaust_frac > 1.0:
+            bad(f"probe_exhaust_frac={self.probe_exhaust_frac} must be "
+                "<= 1.0 (negative disables the pressure check)")
+        if self.deadline_scale < 0.0:
+            bad(f"deadline_scale={self.deadline_scale} must be >= 0 "
+                "(0 = deadlines off)")
+        if self.max_backlog < 0:
+            bad(f"max_backlog={self.max_backlog} must be >= 0 "
+                "(0 = unbounded parking)")
+        if self.spec_len < 0:
+            bad(f"spec_len={self.spec_len} must be >= 0 (0 = off)")
+        if self.spec_ngram < 1:
+            bad(f"spec_ngram={self.spec_ngram} must be >= 1")
+        if self.prefill_chunk and self.prefill_chunk % self.page_size != 0:
+            bad("prefill_chunk must be page-aligned (chunks stream whole "
+                f"arena pages): prefill_chunk={self.prefill_chunk} % "
+                f"page_size={self.page_size} != 0")
+        if not strict:
+            return self
+        # ---- strict: cross-knob consistency (engine-construction checks) --
+        if self.spec_len > 0 and self.prefill_chunk == 0:
+            bad(f"spec_len={self.spec_len} requires chunked admission "
+                "(prefill_chunk > 0): the verify pass IS a spec_len+1 wide "
+                "prefill chunk. Set prefill_chunk to a page-aligned value "
+                "or spec_len=0")
+        if self.max_len < 2:
+            bad(f"max_len = page_size*max_blocks_per_slot = {self.max_len} "
+                "< 2: no request could hold a prompt token plus one "
+                "generated token")
+        return self
 
     @property
     def max_len(self) -> int:
         """Per-request logical context ceiling (tokens)."""
         return self.page_size * self.max_blocks_per_slot
+
+    @classmethod
+    def preset_path(cls) -> str:
+        """Packaged presets file written by ``launch/tune.py`` (the
+        materialized Pareto frontier of the serving auto-tuner)."""
+        import os
+        return os.path.join(os.path.dirname(__file__), "serving_presets.json")
+
+    @classmethod
+    def list_presets(cls, path: Optional[str] = None) -> list[str]:
+        import json
+        with open(path or cls.preset_path()) as f:
+            return sorted(json.load(f)["presets"])
+
+    @classmethod
+    def from_preset(cls, name: str, path: Optional[str] = None,
+                    **overrides) -> "ServingCfg":
+        """Load a named operating point from the tuner-materialized presets
+        file (``latency`` / ``throughput`` / ``energy`` / ``default``, see
+        ``docs/tuning.md``). ``overrides`` replace preset fields — the serve
+        CLI uses this to re-derive arena capacity for its own context
+        ceiling while keeping the tuned knobs."""
+        import json
+        with open(path or cls.preset_path()) as f:
+            data = json.load(f)
+        if name not in data["presets"]:
+            raise ValueError(
+                f"unknown serving preset {name!r}; available: "
+                f"{sorted(data['presets'])}")
+        kwargs = dict(data["presets"][name]["serving"])
+        kwargs.update(overrides)
+        return cls(**kwargs).validate()
 
 
 # ------------------------------------------------------------------- model

@@ -41,6 +41,16 @@ def main(argv=None):
     ap.add_argument("--continuous", action="store_true",
                     help="continuous-batching engine over paged arenas "
                          "(token prompts only)")
+    ap.add_argument("--preset", default=None, metavar="NAME",
+                    help="serving preset from the auto-tuner's materialized "
+                         "Pareto frontier (latency | throughput | energy | "
+                         "default; src/repro/configs/serving_presets.json, "
+                         "see docs/tuning.md). Supplies the tuned knobs "
+                         "(policy, page_size, prefill_chunk, num_slots, "
+                         "watermarks, speculation); arena capacity is "
+                         "re-derived for --prompt/--new. Requires "
+                         "--continuous; conflicts with explicit --policy/"
+                         "--prefill-chunk/--speculate")
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked paged prefill: prompts stream into arena "
                          "pages in chunks of this many tokens, interleaved "
@@ -129,6 +139,19 @@ def main(argv=None):
                  "arenas and verify through the chunked prefill path)")
     if args.speculate < 0:
         ap.error("--speculate must be >= 0 (0 disables)")
+    if args.speculate and args.prefill_chunk == 0:
+        ap.error("--speculate requires chunked admission (--prefill-chunk "
+                 "> 0): the verify pass is a spec_len+1 wide prefill chunk")
+    if args.preset:
+        if not args.continuous:
+            ap.error("--preset requires --continuous (presets are tuned "
+                     "continuous-serving operating points)")
+        for flag, dest in (("--policy", "policy"),
+                           ("--prefill-chunk", "prefill_chunk"),
+                           ("--speculate", "speculate")):
+            if getattr(args, dest) != ap.get_default(dest):
+                ap.error(f"--preset sets {flag}; drop the explicit flag "
+                         "(or drop --preset to hand-tune)")
     if args.deadline_scale and not args.continuous:
         ap.error("--deadline-scale requires --continuous (tick deadlines "
                  "are enforced by the continuous scheduler)")
@@ -154,14 +177,33 @@ def main(argv=None):
         from repro.serving.paged_cache import pages_needed
 
         n_max = args.prompt + args.new
-        serving = ServingCfg(
-            num_slots=args.batch, page_size=16,
-            num_pages=args.batch * pages_needed(n_max, 16) + 1,
-            max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16,
-            prefill_chunk=args.prefill_chunk, policy=args.policy,
-            probe_interval=args.probe_interval,
-            auto_drain=args.auto_drain or args.inject_faults is not None,
-            deadline_scale=args.deadline_scale, spec_len=args.speculate)
+        if args.preset:
+            # tuned knobs from the materialized frontier; capacity re-derived
+            # for THIS context ceiling (the tuner sized its arena for the
+            # smoke trace, not for --prompt/--new)
+            base = ServingCfg.from_preset(args.preset)
+            serving = ServingCfg.from_preset(
+                args.preset,
+                num_pages=base.num_slots * pages_needed(n_max, base.page_size) + 1,
+                max_blocks_per_slot=pages_needed(n_max, base.page_size),
+                prefill_bucket=base.prefill_chunk or base.page_size,
+                probe_interval=args.probe_interval,
+                auto_drain=args.auto_drain or args.inject_faults is not None,
+                deadline_scale=args.deadline_scale)
+            print(f"[serve] preset={args.preset}: policy={serving.policy} "
+                  f"page_size={serving.page_size} "
+                  f"prefill_chunk={serving.prefill_chunk} "
+                  f"num_slots={serving.num_slots} "
+                  f"spec_len={serving.spec_len}")
+        else:
+            serving = ServingCfg(
+                num_slots=args.batch, page_size=16,
+                num_pages=args.batch * pages_needed(n_max, 16) + 1,
+                max_blocks_per_slot=pages_needed(n_max, 16), prefill_bucket=16,
+                prefill_chunk=args.prefill_chunk, policy=args.policy,
+                probe_interval=args.probe_interval,
+                auto_drain=args.auto_drain or args.inject_faults is not None,
+                deadline_scale=args.deadline_scale, spec_len=args.speculate)
         if args.replicas > 1:
             from repro.serving import ReplicaRouter
 
@@ -188,13 +230,13 @@ def main(argv=None):
         else:
             eng = ContinuousServeEngine(cfg, params, serving=serving,
                                         mesh=mesh)
-        print(f"[serve] policy={args.policy}; chunked prefill: "
-              f"{'on, chunk=' + str(args.prefill_chunk) if eng.chunked else 'off (one-shot admission)'}")
-        if args.speculate:
+        print(f"[serve] policy={serving.policy}; chunked prefill: "
+              f"{'on, chunk=' + str(serving.prefill_chunk) if eng.chunked else 'off (one-shot admission)'}")
+        if serving.spec_len:
             on = getattr(eng, "spec_on",
                          args.replicas > 1)  # router: per-replica gate
             print(f"[serve] speculative decoding: "
-                  f"{f'on, k={args.speculate} (prompt lookup)' if on else 'requested but gated off (needs chunked dense/decomposed)'}")
+                  f"{f'on, k={serving.spec_len} (prompt lookup)' if on else 'requested but gated off (needs chunked dense/decomposed)'}")
         if mesh is not None:
             print(f"[serve] mesh: data={mesh.shape['data']} "
                   f"model={mesh.shape['model']} "

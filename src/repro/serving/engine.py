@@ -242,6 +242,12 @@ class ContinuousServeEngine:
         self.cfg = cfg
         self.params = params
         self.serving = serving
+        try:
+            # full cross-knob validation up front: a bad combination fails
+            # HERE with the knob names spelled out, not deep in the scheduler
+            serving.validate()
+        except ValueError as e:
+            raise SchedulerConfigError(str(e)) from None
         rt = rt or cfg.attention
         if mesh is not None:
             if getattr(rt, "mesh", None) is not None and rt.mesh != mesh:

@@ -1,0 +1,39 @@
+"""Hardware-aware serving auto-tuner (ROADMAP item 5).
+
+Searches the ``ServingCfg`` knob space with a seeded, resumable μ+λ
+evolutionary Pareto loop against three minimized objectives measured on the
+REAL ``ContinuousServeEngine`` over a fixed seeded trace — throughput
+(-tokens/step), latency (interactive p95 TTFT), energy (mJ/token via the
+``bench_e2e_energy`` measured-utilization device model) — and materializes
+the frontier into named presets loadable via ``ServingCfg.from_preset()``.
+
+Modules:
+  space      — typed knob space: sampling / mutation / crossover with a
+               ``validate_and_repair`` pass (invalid combos repaired, not
+               crashed); capacity derived from a fixed arena byte budget
+  objectives — the evaluation harness over ``repro.serving.trace.run_trace``
+  evolution  — the μ+λ loop: deterministic under a seed, JSON-checkpoint
+               resumable after every evaluation
+  frontier   — dominance, non-dominated sort, exact hypervolume
+  presets    — frontier -> named operating points (latency / throughput /
+               energy / default) + the presets JSON document
+
+CLI: ``python -m launch.tune --budget 24 --seed 0 --smoke``.
+"""
+from repro.tuning.evolution import EvalRecord, ParetoSearch
+from repro.tuning.frontier import (dominates, hypervolume,
+                                   non_dominated_sort, pareto_front)
+from repro.tuning.objectives import (OBJECTIVE_NAMES, ServingObjective,
+                                     TraceSpec, energy_mj_per_token)
+from repro.tuning.presets import (load_presets, materialize, select_presets,
+                                  write_presets)
+from repro.tuning.space import (DEFAULT_GENOME, DEFAULT_KNOBS, Knob,
+                                KnobSpace, space_for_trace)
+
+__all__ = [
+    "EvalRecord", "ParetoSearch", "dominates", "hypervolume",
+    "non_dominated_sort", "pareto_front", "OBJECTIVE_NAMES",
+    "ServingObjective", "TraceSpec", "energy_mj_per_token", "load_presets",
+    "materialize", "select_presets", "write_presets", "DEFAULT_GENOME",
+    "DEFAULT_KNOBS", "Knob", "KnobSpace", "space_for_trace",
+]

@@ -1,0 +1,184 @@
+"""Objective evaluation for the serving auto-tuner.
+
+One evaluation = materialize the genome into a ``ServingCfg``
+(``KnobSpace.to_serving``), serve the FIXED seeded trace through the real
+``ContinuousServeEngine`` (``repro.serving.trace.run_trace``), and reduce
+the run to a minimized objective vector:
+
+  0. throughput:  -tokens/step (useful generated tokens per engine tick)
+  1. latency:     p95 TTFT of the interactive SLO class, engine ticks
+                  (overall p95 TTFT when the trace carries no classes)
+  2. energy:      mJ/token from the ``bench_e2e_energy`` measured-
+                  utilization device model — the paper-scale model
+                  (OPT-6.7B on TPU v5e constants) charged at THIS run's
+                  measured utilization and page-table traffic
+
+Determinism: the trace is fixed and seeded, decoding is greedy, and every
+objective lives on the engine's tick clock (never wall time), so the same
+genome always maps to the same objective vector — which is what makes the
+search memoizable, checkpoint-resumable, and bit-reproducible.
+
+The energy axis follows ``bench_e2e_energy``'s methodology: the smoke model
+measures SCHEDULING behaviour (utilization, tokens per invocation, paged
+bytes/token for the genome's page size), and the analytical model prices
+that behaviour at paper scale. Utilization here is useful tokens per
+slot-invocation (``tokens_per_step / num_slots``) — speculation's accepted
+drafts raise it, idle slots lower it — so the 1/u weight-stream
+amplification and the idle static-power share both respond to the knobs
+being searched. Requires the ``benchmarks`` package on ``sys.path`` (run
+from the repo root, as the CLI and CI do).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.serving.engine import ContinuousServeEngine
+from repro.serving.trace import make_slo_workload, make_workload, run_trace
+from repro.tuning.space import KnobSpace, space_for_trace
+
+OBJECTIVE_NAMES = ("throughput", "latency", "energy")
+
+# scalar run metrics carried into checkpoints / presets (JSON-safe, wall-
+# time free: timers would break bit-identical reproducibility claims)
+_METRIC_KEYS = (
+    "tokens_per_step", "decode_steps", "useful_tokens", "ttft_p50",
+    "ttft_p95", "itl_p50", "itl_p95", "itl_mean", "ttft_p95_interactive",
+    "itl_p95_interactive", "ttft_p95_batch", "itl_p95_batch",
+    "unserved_interactive", "unserved_batch", "slot_utilization",
+    "arena_utilization", "preemptions", "escalations", "deescalations",
+    "spec_accept_rate", "spec_accepted_per_step", "prefill_chunks",
+    "defrags", "prefill_write_bytes",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """The fixed seeded workload an entire search is scored on."""
+
+    kind: str = "slo"        # slo (mixed interactive/batch) | mixed (Poisson)
+    seed: int = 0
+    n_requests: int = 12
+    rate: float = 2.0
+
+    def build(self, vocab: int):
+        if self.kind == "slo":
+            return make_slo_workload(self.seed, self.n_requests, vocab,
+                                     self.rate)
+        if self.kind == "mixed":
+            return make_workload(self.seed, self.n_requests, vocab,
+                                 self.rate), None
+        raise ValueError(f"unknown trace kind {self.kind!r}")
+
+
+_PAPER_SCALE: dict = {}      # lazy: (n_params, num_layers, ModelConfig)
+_KV_PAGED: dict[int, float] = {}   # page_size -> paged bytes/token/layer
+
+
+def _paper_scale():
+    if not _PAPER_SCALE:
+        from repro.common.param import count_params
+        from repro.configs import get_config
+        from repro.models.model import model_defs
+
+        mc = get_config("opt-6.7b")
+        _PAPER_SCALE["cfg"] = mc
+        _PAPER_SCALE["n_params"] = count_params(model_defs(mc))
+        _PAPER_SCALE["L"] = mc.num_layers
+    return _PAPER_SCALE
+
+
+def _kv_paged_bytes(page_size: int) -> float:
+    if page_size not in _KV_PAGED:
+        from repro.serving import paged_cache as pgc
+
+        mc = _paper_scale()["cfg"]
+        arena = pgc.init_paged_dense(2, page_size, mc.num_kv_heads,
+                                     mc.head_dim)
+        _KV_PAGED[page_size] = pgc.bytes_per_token(arena, page_size)
+    return _KV_PAGED[page_size]
+
+
+def energy_mj_per_token(run: dict, serving) -> float:
+    """Price the measured run at paper scale (OPT-6.7B / TPU v5e) through
+    ``bench_e2e_energy.decode_token_cost``: block-table-amortized paged
+    bytes for THIS page size, chunked-prefill write amortization, and the
+    measured tokens-per-slot-invocation utilization."""
+    try:
+        from benchmarks.bench_e2e_energy import TrafficCfg, decode_token_cost
+        from benchmarks.hw import TPU_V5E
+    except ImportError as e:  # pragma: no cover - mislocated invocation
+        raise ImportError(
+            "the energy objective prices runs through benchmarks/"
+            "bench_e2e_energy.py — run from the repository root so the "
+            "'benchmarks' package imports") from e
+
+    ps = _paper_scale()
+    kv = _kv_paged_bytes(serving.page_size)
+    util = min(1.0, max(run["tokens_per_step"] / serving.num_slots, 1e-6))
+    tc = TrafficCfg(batch=serving.num_slots,
+                    kv_bytes_per_token_layer=kv,
+                    prefill_ctx=2048, gen_tokens=256,
+                    prefill_write_bytes_per_token_layer=kv,
+                    slot_util=util)
+    _, e = decode_token_cost(TPU_V5E, ps["n_params"], ps["L"], tc)
+    return e * 1e3
+
+
+class ServingObjective:
+    """Callable evaluation harness: genome -> (objectives, metrics).
+
+    Builds the trace once, then serves it through a fresh engine per
+    evaluation. A donor engine per (cfg, rt) variant shares its jitted step
+    functions with every evaluation engine (``adopt_compiled``), so the
+    whole search compiles each step shape once."""
+
+    names = OBJECTIVE_NAMES
+
+    def __init__(self, cfg, params, trace: TraceSpec = TraceSpec(),
+                 space: Optional[KnobSpace] = None):
+        self.cfg = cfg
+        self.params = params
+        self.trace = trace
+        self.work, self.slos = trace.build(cfg.vocab_size)
+        self.space = space or space_for_trace(self.work)
+        assert self.space.max_len >= max(
+            len(w.prompt) + w.target for w in self.work), (
+            "KnobSpace.max_len does not cover the trace")
+        self._donors: dict[bool, ContinuousServeEngine] = {}
+
+    def _donor(self, serving) -> ContinuousServeEngine:
+        # tiered engines resolve a different rt (cpq filled in), so they
+        # need their own donor — adopt_compiled requires identical (cfg, rt)
+        tiered = bool(serving.enable_escalation)
+        if tiered not in self._donors:
+            base = self.space.to_serving(self.space.default_genome())
+            if tiered:
+                base = dataclasses.replace(base, enable_escalation=True)
+            self._donors[tiered] = ContinuousServeEngine(
+                self.cfg, self.params, serving=base)
+        return self._donors[tiered]
+
+    def __call__(self, genome: dict) -> tuple[tuple[float, ...], dict]:
+        serving = self.space.to_serving(genome)
+        run = run_trace(self.cfg, self.params, self.work, serving,
+                        slos=self.slos, donor=self._donor(serving))
+        energy = energy_mj_per_token(run, serving)
+        latency = float(run.get("ttft_p95_interactive", run["ttft_p95"]))
+        # unscheduled requests (never produced a token) are a hard miss:
+        # their sentinel stamps are excluded from the percentiles, so make
+        # the latency axis reflect them instead of rewarding starvation
+        unserved = sum(v for k, v in run.items()
+                       if k.startswith("unserved_"))
+        if unserved:
+            latency += 1e3 * unserved
+        objectives = (-float(run["tokens_per_step"]), latency, float(energy))
+        import numbers
+        metrics = {}
+        for k in _METRIC_KEYS:
+            v = run.get(k)
+            if isinstance(v, numbers.Real) and not isinstance(v, bool):
+                fv = float(v)  # numpy scalars -> JSON-native numbers
+                metrics[k] = int(fv) if fv.is_integer() else fv
+        metrics["energy_mj_per_token"] = float(energy)
+        return objectives, metrics

@@ -289,9 +289,11 @@ def test_idle_clock_jumps_over_unarrived_fifo_head(model):
 
 
 def test_high_watermark_validation():
-    with pytest.raises(AssertionError):
+    # ServingCfg.validate() runs from __post_init__: inconsistent knobs
+    # raise ValueError with the knob names spelled out
+    with pytest.raises(ValueError, match="high_watermark"):
         ServingCfg(low_watermark=0.6, high_watermark=0.4)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="policy"):
         ServingCfg(policy="lifo")
 
 

@@ -1,0 +1,334 @@
+"""Auto-tuner suite (ROADMAP item 5): dominance / non-dominated sort /
+hypervolume units, the repair contract (every mutated / crossed / repaired
+genome materializes into a VALID ``ServingCfg`` inside the knob space and
+under the fixed arena byte budget), same-seed search determinism and
+checkpoint-resume bit-identity on a cheap synthetic objective,
+``ServingCfg.validate`` clear-error units (including at engine
+construction), and the ``from_preset`` round trip against the committed
+presets JSON."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import ARCHS, ServingCfg, smoke_config
+from repro.models import model as M
+from repro.serving.engine import SchedulerConfigError
+from repro.tuning import (DEFAULT_GENOME, EvalRecord, KnobSpace, ParetoSearch,
+                          dominates, hypervolume, load_presets, materialize,
+                          non_dominated_sort, pareto_front, select_presets)
+from repro.tuning.evolution import make_space_from_signature
+from repro.tuning.space import space_for_trace
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ---------------------------------------------------------------- frontier
+
+def test_dominates():
+    assert dominates((1, 1), (2, 2))
+    assert dominates((1, 2), (1, 3))          # tie on one axis, better other
+    assert not dominates((1, 2), (1, 2))      # equal: no strict improvement
+    assert not dominates((1, 3), (3, 1))      # incomparable
+    assert not dominates((2, 2), (1, 1))
+
+
+def test_pareto_front_known():
+    pts = [(1, 5), (2, 2), (5, 1), (3, 3), (2, 2), (6, 6)]
+    front = pareto_front(pts)
+    assert front == [0, 1, 2, 4]              # (3,3) dominated by (2,2); dup kept
+    fronts = non_dominated_sort(pts)
+    assert fronts[0] == [0, 1, 2, 4]
+    assert fronts[1] == [3]
+    assert fronts[2] == [5]
+    assert sorted(i for f in fronts for i in f) == list(range(len(pts)))
+
+
+def test_hypervolume_known_values():
+    # single point: a box
+    assert hypervolume([(1.0, 1.0)], (3.0, 3.0)) == pytest.approx(4.0)
+    # two staircase points: union of boxes, overlap counted once
+    assert hypervolume([(1.0, 2.0), (2.0, 1.0)], (3.0, 3.0)) \
+        == pytest.approx(2 + 2 - 1)
+    # dominated and out-of-reference points contribute nothing
+    assert hypervolume([(1.0, 2.0), (2.0, 1.0), (2.5, 2.5), (5.0, 0.0)],
+                       (3.0, 3.0)) == pytest.approx(3.0)
+    assert hypervolume([], (3.0, 3.0)) == 0.0
+    # 3d box
+    assert hypervolume([(0.0, 0.0, 0.0)], (2.0, 2.0, 2.0)) \
+        == pytest.approx(8.0)
+
+
+# ------------------------------------------------------------------- space
+
+def _space():
+    return KnobSpace(max_len=48)
+
+
+def test_default_genome_matches_hand_tuned_equal_arena():
+    import dataclasses
+
+    from repro.serving.trace import equal_arena_serving
+    sp = _space()
+    got = sp.to_serving(sp.default_genome())
+    want = equal_arena_serving(4, 48, 8, prefill_chunk=16)
+    # escalated_pages is budget-derived by the tuner but left at the class
+    # default by the hand-tuned foil; escalation is OFF in both, so the
+    # field is inert — everything else must match exactly
+    assert got == dataclasses.replace(
+        want, escalated_pages=got.escalated_pages)
+
+
+def test_proposals_stay_in_space_after_repair():
+    sp = _space()
+    rng = np.random.default_rng(7)
+    budget_bytes = sp.budget_tokens
+    for _ in range(200):
+        a, b = sp.sample(rng), sp.sample(rng)
+        for g in (a, sp.mutate(a, rng, 0.35), sp.crossover(a, b, rng)):
+            for knob in sp.knobs:
+                assert g[knob.name] in knob.choices, (knob.name, g)
+            s = sp.to_serving(g)          # .validate() chained inside
+            assert s.prefill_chunk % s.page_size == 0
+            assert s.critical_watermark <= s.low_watermark <= 1.0
+            assert s.low_watermark <= s.high_watermark <= 1.0
+            # equal-arena contract: capacity never exceeds the byte budget
+            # by more than one page of rounding slack
+            assert (s.num_pages - 1) * s.page_size <= budget_bytes
+
+
+def test_repair_fixes_out_of_space_genomes():
+    sp = _space()
+    g = sp.validate_and_repair({"num_slots": 5, "page_size": 9,
+                                "policy": "lifo",
+                                "low_watermark": 0.05,
+                                "critical_watermark": 0.9,
+                                "high_watermark": 0.0})
+    for knob in sp.knobs:
+        assert g[knob.name] in knob.choices
+    assert g["critical_watermark"] <= g["low_watermark"] \
+        <= g["high_watermark"]
+    sp.to_serving(g)
+    # missing knobs fill from the default genome
+    assert sp.validate_and_repair({}) == sp.default_genome()
+
+
+def test_mutation_always_moves():
+    sp = _space()
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        g = sp.sample(rng)
+        assert sp.mutate(g, rng, 0.0) != g     # p=0 still forces one move
+
+
+# ---------------------------------------------------------------- evolution
+
+def _synthetic_evaluate(space):
+    """Cheap deterministic stand-in: objectives derived from the genome."""
+    def ev(g):
+        s = space.to_serving(g)
+        obj = (-float(s.num_slots * (1 + 0.3 * s.spec_len)),
+               float(s.prefill_chunk + 10 * (s.policy == "fifo")),
+               float(s.page_size + s.num_slots))
+        return obj, {"num_slots": s.num_slots}
+    return ev
+
+
+def test_same_seed_reproduces_search():
+    sp = _space()
+    runs = []
+    for _ in range(2):
+        se = ParetoSearch(sp, _synthetic_evaluate(sp), seed=3, mu=4, lam=4)
+        front = se.run(20)
+        runs.append(([sp.genome_key(r.genome) for r in se.records],
+                     [r.objectives for r in front]))
+    assert runs[0] == runs[1]
+    se2 = ParetoSearch(sp, _synthetic_evaluate(sp), seed=4, mu=4, lam=4)
+    se2.run(20)
+    assert [sp.genome_key(r.genome) for r in se2.records] != runs[0][0]
+
+
+def test_record_zero_is_hand_tuned_default():
+    sp = _space()
+    se = ParetoSearch(sp, _synthetic_evaluate(sp), seed=0)
+    se.run(1)
+    assert se.baseline().genome == sp.default_genome()
+    assert sp.default_genome() == dict(DEFAULT_GENOME)
+
+
+def test_frontier_is_non_dominated_and_covers_baseline():
+    sp = _space()
+    se = ParetoSearch(sp, _synthetic_evaluate(sp), seed=0, mu=4, lam=4)
+    front = se.run(24)
+    objs = [r.objectives for r in front]
+    assert len(pareto_front(objs)) == len(objs)
+    base = se.baseline().objectives
+    presets = select_presets(sp, front)
+    for axis, name in enumerate(("throughput", "latency", "energy")):
+        assert presets[name].objectives[axis] <= base[axis]
+    assert se.frontier_hypervolume() > 0
+
+
+def test_checkpoint_resume_bit_identical(tmp_path):
+    sp = _space()
+    ck = str(tmp_path / "ck.json")
+    a = ParetoSearch(sp, _synthetic_evaluate(sp), seed=5, mu=4, lam=4,
+                     checkpoint=ck)
+    a.run(6)
+    assert os.path.exists(ck)
+    # fresh process stand-in: new search object resumes from the file
+    b = ParetoSearch(sp, _synthetic_evaluate(sp), seed=5, mu=4, lam=4,
+                     checkpoint=ck)
+    assert len(b.records) == 6
+    front_b = b.run(18)
+    straight = ParetoSearch(sp, _synthetic_evaluate(sp), seed=5, mu=4, lam=4)
+    front_s = straight.run(18)
+    assert [sp.genome_key(r.genome) for r in b.records] == \
+        [sp.genome_key(r.genome) for r in straight.records]
+    assert [r.objectives for r in front_b] == [r.objectives for r in front_s]
+
+
+def test_checkpoint_param_mismatch_rejected(tmp_path):
+    sp = _space()
+    ck = str(tmp_path / "ck.json")
+    ParetoSearch(sp, _synthetic_evaluate(sp), seed=5, checkpoint=ck).run(3)
+    with pytest.raises(ValueError, match="seed"):
+        ParetoSearch(sp, _synthetic_evaluate(sp), seed=6, checkpoint=ck)
+    with pytest.raises(ValueError, match="knob space"):
+        ParetoSearch(KnobSpace(max_len=64), _synthetic_evaluate(sp), seed=5,
+                     checkpoint=ck)
+
+
+def test_space_signature_round_trip(tmp_path):
+    sp = _space()
+    ck = str(tmp_path / "ck.json")
+    ParetoSearch(sp, _synthetic_evaluate(sp), seed=1, checkpoint=ck).run(2)
+    with open(ck) as f:
+        sig = json.load(f)["space"]
+    sp2 = make_space_from_signature(sig)
+    assert sp2.genome_key(sp2.default_genome()) == \
+        sp.genome_key(sp.default_genome())
+    assert sp2.to_serving(sp2.default_genome()) == \
+        sp.to_serving(sp.default_genome())
+
+
+def test_memo_hits_advance_budget_on_tiny_space():
+    # a space smaller than the budget must terminate, re-using evaluations
+    sp = KnobSpace(max_len=48, knobs=(
+        KnobSpace(max_len=48).knobs[0],))  # num_slots only: 4 genomes
+    calls = {"n": 0}
+
+    def ev(g):
+        calls["n"] += 1
+        return (float(g["num_slots"]),), {}
+
+    se = ParetoSearch(sp, ev, seed=0, mu=2, lam=2)
+    se.run(12)
+    assert len(se.records) == 12
+    assert calls["n"] <= 4
+
+
+# ------------------------------------------------------- ServingCfg.validate
+
+def test_validate_clear_errors():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServingCfg(page_size=8, prefill_chunk=12)
+    with pytest.raises(ValueError, match="high_watermark"):
+        ServingCfg(low_watermark=0.6, high_watermark=0.4)
+    with pytest.raises(ValueError, match="critical_watermark"):
+        ServingCfg(critical_watermark=0.5, low_watermark=0.25)
+    with pytest.raises(ValueError, match="policy"):
+        ServingCfg(policy="lifo")
+    with pytest.raises(ValueError, match="spec_len"):
+        ServingCfg(spec_len=-1)
+    with pytest.raises(ValueError, match="num_pages"):
+        ServingCfg(num_pages=1)
+    # strict-only gate: speculation needs chunked admission
+    cfg = ServingCfg(spec_len=2, prefill_chunk=0)     # constructs fine
+    with pytest.raises(ValueError, match="spec_len"):
+        cfg.validate()
+    ok = ServingCfg()
+    assert ok.validate() is ok                 # chainable: returns self
+
+
+def test_engine_construction_raises_scheduler_config_error():
+    cfg = smoke_config(ARCHS["qwen1.5-0.5b"])
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.serving.engine import ContinuousServeEngine
+    bad = ServingCfg(spec_len=2, prefill_chunk=0)
+    with pytest.raises(SchedulerConfigError, match="spec_len"):
+        ContinuousServeEngine(cfg, params, serving=bad)
+
+
+# ----------------------------------------------------------------- presets
+
+def test_committed_presets_load_and_validate():
+    path = ServingCfg.preset_path()
+    assert os.path.exists(path), "run launch/tune.py to regenerate"
+    doc = load_presets(path)
+    assert doc["version"] == 1
+    names = ServingCfg.list_presets()
+    for req in ("latency", "throughput", "energy", "default"):
+        assert req in names
+    for name in names:
+        s = ServingCfg.from_preset(name)       # .validate() inside
+        assert isinstance(s, ServingCfg)
+        assert s.prefill_chunk % s.page_size == 0
+    # frontier in the committed doc really is non-dominated
+    objs = [tuple(p["objectives"][n] for n in doc["objective_names"])
+            for p in doc["frontier"]]
+    assert len(pareto_front(objs)) == len(objs)
+    # per-axis winners are no worse than the hand-tuned default
+    base = doc["presets"]["default"]["objectives"]
+    for name in ("throughput", "latency", "energy"):
+        assert doc["presets"][name]["objectives"][name] <= base[name]
+
+
+def test_from_preset_overrides_and_unknown():
+    s = ServingCfg.from_preset("latency", num_slots=2, num_pages=9,
+                               max_blocks_per_slot=2)
+    assert s.num_slots == 2 and s.num_pages == 9
+    with pytest.raises(ValueError, match="latency"):
+        ServingCfg.from_preset("no-such-preset")
+
+
+def test_materialize_document_shape(tmp_path):
+    sp = _space()
+    se = ParetoSearch(sp, _synthetic_evaluate(sp), seed=0, mu=4, lam=4)
+    se.run(16)
+    doc = materialize(se, trace={"kind": "synthetic"})
+    assert set(doc["presets"]) == {"throughput", "latency", "energy",
+                                   "default"}
+    for p in doc["presets"].values():
+        ServingCfg(**p["serving"])            # serving dict round-trips
+    assert doc["seed"] == 0 and doc["budget"] == 16
+    assert doc["hypervolume"] == se.frontier_hypervolume()
+    # wall-time free: a rerun materializes the identical document
+    se2 = ParetoSearch(sp, _synthetic_evaluate(sp), seed=0, mu=4, lam=4)
+    se2.run(16)
+    assert materialize(se2, trace={"kind": "synthetic"}) == doc
+
+
+# ------------------------------------------------- trace extraction (sat 1)
+
+def test_run_trace_importable_and_bench_back_compat():
+    from repro.serving.trace import (class_tails, equal_arena_serving,
+                                     make_slo_workload, run_trace)
+    from benchmarks.bench_serving import run_continuous
+    assert run_continuous is run_trace
+    work, slos = make_slo_workload(0, 8, 64, 2.0)
+    assert len(work) == 8 and len(slos) == 8
+    assert {s.name for s in slos} <= {"interactive", "batch"}
+    assert equal_arena_serving(4, 48, 8).num_pages == \
+        4 * ((48 + 7) // 8) + 1
+
+
+def test_space_for_trace_covers_workload():
+    from repro.serving.trace import make_workload
+    work = make_workload(0, 6, 64, 2.0)
+    sp = space_for_trace(work)
+    assert sp.max_len >= max(len(w.prompt) + w.target for w in work)
